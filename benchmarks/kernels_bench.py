@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks (interpret-mode wall times are NOT TPU perf —
+the derived column reports achieved-vs-reference correctness + shapes;
+TPU roofline positioning comes from the dry-run analysis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.quant_offload.ops import dequantize, quantize
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+from benchmarks.common import time_call
+
+
+def run(iters: int = 3):
+    rng = np.random.RandomState(0)
+    rows = []
+
+    q = jnp.asarray(rng.randn(1, 512, 4, 64) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.randn(1, 512, 2, 64) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.randn(1, 512, 2, 64) * 0.3, jnp.float32)
+    fa = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True))
+    t = time_call(fa, q, k, v, iters=iters)
+    flops = 4 * 512 * 512 * 4 * 64
+    rows.append(("kernel.flash_attention_512", t,
+                 f"gqa=2x;flops={flops:.2e};interpret=True"))
+
+    x = jnp.asarray(rng.randn(2, 512, 4, 64) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(2, 512, 4)) * 0.1, jnp.float32)
+    A = -jnp.asarray(np.abs(rng.randn(4)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.randn(2, 512, 64) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.randn(2, 512, 64) * 0.3, jnp.float32)
+    ssd = jax.jit(lambda *a: ssd_scan(*a, chunk=128))
+    t = time_call(ssd, x, dt, A, Bm, Cm, iters=iters)
+    rows.append(("kernel.ssd_scan_512", t, "chunk=128;interpret=True"))
+
+    big = jnp.asarray(rng.randn(1024, 1024), jnp.float32)
+    qz = jax.jit(quantize)
+    t = time_call(qz, big, iters=iters)
+    rows.append(("kernel.quantize_1Mx", t,
+                 f"compression={big.dtype.itemsize}x->1x+scales"))
+    return rows

@@ -1,0 +1,125 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+ARCH_ORDER = ["whisper_large_v3", "qwen2_7b", "qwen1_5_0_5b",
+              "stablelm_1_6b", "llama3_2_1b", "qwen3_moe_30b_a3b",
+              "granite_moe_1b_a400m", "llama3_2_vision_90b", "mamba2_780m",
+              "zamba2_1_2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, policy: str):
+    out = {}
+    for f in glob.glob(os.path.join(ART, f"*__{mesh}__{policy}.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.1f}"
+
+
+def roofline_table(mesh: str = "single", policy: str = "none") -> str:
+    recs = load(mesh, policy)
+    lines = [
+        "| arch | shape | peak/chip GiB | compute ms | memory ms | "
+        "collective ms | bottleneck | MODEL/HLO flops | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | — | "
+                    f"skip (full-attn, long_500k needs sub-quadratic) | — | — |")
+                continue
+            rl = r["roofline"]
+            m = r["memory"]
+            lines.append(
+                f"| {arch} | {shape} | {m['peak_per_chip'] / 2**30:.2f} "
+                f"| {fmt_ms(rl['compute_s'])} | {fmt_ms(rl['memory_s'])} "
+                f"| {fmt_ms(rl['collective_s'])} | {rl['bottleneck']} "
+                f"| {rl['useful_flops_ratio']:.2f} "
+                f"| {rl['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def memory_table(policy: str = "chameleon") -> str:
+    recs = load("single", policy)
+    base = load("single", "none")
+    lines = [
+        "| arch (train_4k) | baseline peak/chip | policy | swapped/chip | "
+        "device est (TPU) | fits 16G | stall ms |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        r = recs.get((arch, "train_4k"))
+        b = base.get((arch, "train_4k"))
+        if not r or not b:
+            continue
+        pi = r.get("policy_info", {})
+        m = r["memory"]
+        bpeak = b["memory"]["peak_per_chip"] / 2 ** 30
+        sw = pi.get("swapped_bytes_per_chip", 0) / 2 ** 30
+        dev = m.get("device_peak_est_tpu", m["peak_per_chip"]) / 2 ** 30
+        fits = m.get("fits_16g_with_offload", m["fits_16g"])
+        stall = pi.get("stall_s", 0.0) * 1e3
+        lines.append(f"| {arch} | {bpeak:.2f} GiB | {pi.get('policy')} "
+                     f"| {sw:.2f} GiB | {dev:.2f} GiB | {fits} "
+                     f"| {stall:.0f} |")
+    return "\n".join(lines)
+
+
+def multi_vs_single() -> str:
+    s = load("single", "none")
+    m = load("multi", "none")
+    lines = [
+        "| arch | shape | 1-pod coll ms | 2-pod coll ms | 1-pod peak GiB | "
+        "2-pod peak GiB |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            a, b = s.get((arch, shape)), m.get((arch, shape))
+            if not a or not b:
+                continue
+            lines.append(
+                f"| {arch} | {shape} "
+                f"| {fmt_ms(a['roofline']['collective_s'])} "
+                f"| {fmt_ms(b['roofline']['collective_s'])} "
+                f"| {a['memory']['peak_per_chip'] / 2**30:.2f} "
+                f"| {b['memory']['peak_per_chip'] / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", choices=["roofline", "memory", "multi"],
+                    default="roofline")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--policy", default="none")
+    args = ap.parse_args()
+    if args.table == "roofline":
+        print(roofline_table(args.mesh, args.policy))
+    elif args.table == "memory":
+        print(memory_table(args.policy))
+    else:
+        print(multi_vs_single())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""§Roofline: the three-term roofline per (arch × shape × mesh) cell from
+the dry-run artifacts (artifacts/dryrun/*.json — produced by
+``python -m repro.launch.dryrun --all``)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run(iters: int = 1):
+    rows = []
+    files = sorted(glob.glob(os.path.join(ART, "*__none.json")))
+    if not files:
+        return [("roofline.no_artifacts", 0.0,
+                 "run `python -m repro.launch.dryrun --all` first")]
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        name = f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        rows.append((name, r["step_time_bound_s"],
+                     f"bottleneck={r['bottleneck']};"
+                     f"compute={r['compute_s'] * 1e3:.1f}ms;"
+                     f"mem={r['memory_s'] * 1e3:.1f}ms;"
+                     f"coll={r['collective_s'] * 1e3:.1f}ms;"
+                     f"mfu_bound={r['mfu_bound']:.3f};"
+                     f"useful_flops={r['useful_flops_ratio']:.2f}"))
+    return rows

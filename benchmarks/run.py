@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "table1_profiling",
+    "fig4_grouping",
+    "table2_perf_benefit",
+    "table4_max_size",
+    "fig7_stability",
+    "fig8_reuse_interval",
+    "kernels_bench",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and not any(s in mod_name
+                                 for s in args.only.split(",")):
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            emit(mod.run(iters=args.iters))
+        except Exception as e:  # noqa: BLE001
+            failed.append(mod_name)
+            print(f"{mod_name}.ERROR,0,{e!r}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

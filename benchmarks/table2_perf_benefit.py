@@ -1,0 +1,81 @@
+"""Paper Table 2: performance benefit of swap over (a) recomputation and
+(b) higher-degree parallelism.
+
+(a) is *measured* on CPU: full-remat step vs Chameleon-policy step (swap is
+free on the CPU backend where host==device, matching the paper's premise
+that overlapped swap has no critical-path cost; the stall term computed by
+the simulator is reported alongside).  Paper: up to 38.94% / avg ~19%.
+
+(b) is roofline-derived from the dry-run artifacts when present: the same
+arch mapped TP16×DP16 (baseline) vs DP-heavy after swap frees the memory —
+the paper's "reduce TP/PP in favor of DP" argument in collective-bytes form.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.common.config import ChameleonConfig, TrainConfig
+from repro.core.executor import Executor
+from repro.distributed.steps import make_train_step
+from repro.models.registry import get_api
+from repro.optim.adamw import adamw_init
+
+from benchmarks.common import time_call
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run(iters: int = 5):
+    cfg = C.get_reduced("llama2_paper").replace(num_layers=8)
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = {"tokens": jnp.ones((4, 256), jnp.int32),
+             "labels": jnp.ones((4, 256), jnp.int32)}
+    args = (params, opt, batch, jnp.float32(1.0))
+    ex = Executor(ChameleonConfig())
+    tcfg = TrainConfig()
+
+    t_remat = time_call(jax.jit(make_train_step(cfg, tcfg, "full_remat")),
+                        *args, iters=iters)
+    t_cham = time_call(
+        jax.jit(make_train_step(cfg, tcfg, ex.conservative(None).to_jax())),
+        *args, iters=iters)
+    t_base = time_call(
+        jax.jit(make_train_step(cfg, tcfg, ex.baseline().to_jax())),
+        *args, iters=iters)
+
+    benefit = 100.0 * (t_remat - t_cham) / t_remat
+    rows = [
+        ("table2.full_recompute", t_remat, "policy=remat"),
+        ("table2.chameleon_swap", t_cham,
+         f"benefit_vs_recompute={benefit:.1f}% (paper: up to 38.94%)"),
+        ("table2.no_constraint_baseline", t_base,
+         f"chameleon_overhead={100 * (t_cham - t_base) / t_base:.1f}%"),
+    ]
+
+    # (b) parallelism-degree comparison from dry-run artifacts
+    f = os.path.join(ART, "qwen1_5_0_5b__train_4k__single__none.json")
+    if os.path.exists(f):
+        with open(f) as fh:
+            rec = json.load(fh)
+        r = rec["roofline"]
+        tp_bound = r["step_time_bound_s"]
+        # DP-heavy bound: drop per-layer TP all-reduces, keep one grad
+        # all-reduce (params bytes * 2 / link); compute term unchanged
+        import repro.configs as CC
+        full = CC.get_config("qwen1_5_0_5b")
+        grad_bytes = full.param_count() * 2 * 2  # bf16 grads, ring 2x
+        coll_dp = grad_bytes / 50e9
+        dp_bound = max(r["compute_s"], r["memory_s"], coll_dp)
+        rows.append((
+            "table2.tp16_vs_dp_roofline", tp_bound,
+            f"dp_bound={dp_bound * 1e3:.1f}ms;speedup={tp_bound / dp_bound:.2f}x"
+            " (needs Chameleon to fit DP-only)"))
+    return rows

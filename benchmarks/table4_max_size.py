@@ -1,0 +1,103 @@
+"""Paper Table 4 / Fig 6: maximum trainable model per scaling dimension
+under a fixed HBM budget — PyTorch-analogue baseline vs Chameleon.
+
+For each dimension (batch, seq, hidden, layers) we grow the dimension and
+evaluate the reconstructed no-swap peak vs the Chameleon-projected peak
+(Algo 2 on the same profile).  Budget is an emulated 1.5 GiB device.
+Paper ratios: batch 4x, seq 4x, hidden 1.24x, layers 1.83x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.common.config import ChameleonConfig, TrainConfig
+from repro.core.memtrace import build_timeline
+from repro.core.policy import ChameleonOOMError, generate_policy
+from repro.core.profiler import profile_jaxpr
+from repro.core.executor import Executor
+from repro.distributed.steps import make_grad_step
+from repro.models.registry import get_api
+
+BUDGET = int(1.5 * 2 ** 30)
+
+
+def _peaks(cfg, B, S):
+    api = get_api(cfg)
+    params_sds = jax.eval_shape(lambda k: api.init(cfg, k)[0],
+                                jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    step = make_grad_step(cfg, TrainConfig(),
+                          Executor(ChameleonConfig()).baseline().to_jax())
+    cj = jax.make_jaxpr(step)(params_sds, batch,
+                              jax.ShapeDtypeStruct((), jnp.float32))
+    prof = profile_jaxpr(cj, t_iter=10.0)
+    tl = build_timeline(prof)
+    if tl.peak <= BUDGET:
+        return tl.peak, tl.peak
+    try:
+        pol = generate_policy(prof, ChameleonConfig(), BUDGET, timeline=tl)
+        return tl.peak, pol.projected_peak
+    except ChameleonOOMError:
+        return tl.peak, tl.peak  # swap can't fix it
+
+
+def _max_dim(base_cfg, B0, S0, dim, values):
+    """Largest value whose (baseline, chameleon) peak fits the budget."""
+    best_base = best_cham = None
+    for v in values:
+        cfg, B, S = base_cfg, B0, S0
+        if dim == "batch":
+            B = v
+        elif dim == "seq":
+            S = v
+        elif dim == "hidden":
+            cfg = base_cfg.replace(d_model=v, num_heads=max(2, v // 32),
+                                   num_kv_heads=max(2, v // 32), head_dim=32,
+                                   d_ff=int(v * 2.7) // 8 * 8)
+        elif dim == "layers":
+            cfg = base_cfg.replace(num_layers=v)
+        base_peak, cham_peak = _peaks(cfg, B, S)
+        if base_peak <= BUDGET:
+            best_base = v
+        if cham_peak <= BUDGET:
+            best_cham = v
+        if cham_peak > BUDGET:
+            break
+    return best_base, best_cham
+
+
+def run(iters: int = 1):
+    # deep-and-narrow toy llama: activations dominate the floor the way
+    # they do at the paper's scale (batch/seq sweeps), shallower for the
+    # width/depth sweeps to keep CPU profiling time sane
+    deep = C.get_reduced("llama2_paper").replace(
+        num_layers=16, d_model=256, num_heads=8, num_kv_heads=8,
+        head_dim=32, d_ff=688, vocab_size=2048)
+    shallow = deep.replace(num_layers=5)
+    rows = []
+    sweeps = {
+        "batch": (deep, 4, 512,
+                  [4, 8, 16, 24, 32, 48, 64, 96, 128, 192, 256]),
+        "seq": (deep, 4, 512,
+                [512, 1024, 2048, 3072, 4096, 6144, 8192, 12288, 16384]),
+        "hidden": (deep, 4, 512,
+                   [256, 320, 384, 448, 512, 640, 768, 896, 1024]),
+        "layers": (shallow, 4, 512,
+                   [5, 7, 9, 11, 14, 17, 21, 26, 32, 40, 50, 64, 80]),
+    }
+    for dim, (cfg, B0, S0, values) in sweeps.items():
+        if dim == "batch":
+            B0 = values[0]
+        if dim == "seq":
+            S0 = values[0]
+        bb, bc = _max_dim(cfg, B0, S0, dim, values)
+        ratio = (bc / bb) if (bb and bc) else float("nan")
+        paper = {"batch": 4.0, "seq": 4.0, "hidden": 1.24,
+                 "layers": 1.83}[dim]
+        rows.append((f"table4.max_{dim}", 0.0,
+                     f"baseline={bb};chameleon={bc};ratio={ratio:.2f}x"
+                     f" (paper:{paper}x)"))
+    return rows

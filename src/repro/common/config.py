@@ -1,0 +1,246 @@
+"""Configuration dataclasses for Chameleon-JAX.
+
+A single ``ModelConfig`` covers every assigned architecture family
+(dense / moe / encdec / vlm / ssm / hybrid); ``ShapeConfig`` describes the
+assigned input-shape cells; ``MeshConfig``/``TrainConfig``/``ServeConfig``
+describe the runtime.  Everything is a frozen dataclass so configs are
+hashable and usable as jit static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | encdec | vlm | ssm | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    vocab_size: int
+    num_kv_heads: int = 0          # 0 -> = num_heads (MHA)
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    act: str = "silu"              # silu | gelu
+    glu: bool = True               # gated MLP (silu(x@Wg) * (x@Wu)) @ Wd
+    rope_theta: float = 10000.0
+    pos_embedding: str = "rope"    # rope | learned | none
+    max_position: int = 1 << 20
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (zamba2): shared attention block every k ssm layers ---
+    hybrid_attn_every: int = 0
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500        # precomputed frame embeddings (stub frontend)
+
+    # --- VLM (llama-3.2-vision): cross-attention image layers ---
+    cross_attn_every: int = 0      # every k-th layer is a cross-attn layer
+    image_tokens: int = 0          # precomputed patch embeddings (stub frontend)
+
+    # --- numerics / implementation ---
+    dtype: str = "bfloat16"        # activation/compute dtype
+    param_dtype: str = "bfloat16"
+    attn_impl: str = "chunked"     # dense | chunked | pallas
+    attn_chunk: int = 1024
+    scan_layers: bool = True       # scan over stacked layer params
+    logits_softcap: float = 0.0
+
+    def __post_init__(self):
+        if self.num_kv_heads == 0:
+            object.__setattr__(self, "num_kv_heads", self.num_heads)
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ---- derived sizes -------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run the long_500k cell? (SSM / hybrid decode)."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count, exact against the model zoo's init
+        (validated by tests/test_models_smoke.py)."""
+        d, v = self.d_model, self.vocab_size
+        norm = 2 * d if self.norm == "layernorm" else d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.pos_embedding == "learned":
+            emb += self.max_position * d
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.qkv_bias:
+            attn += self.q_dim + 2 * self.kv_dim
+        mlp_mult = 3 if self.glu else 2
+        dense_mlp = mlp_mult * d * self.d_ff
+        dense_block = attn + dense_mlp + 2 * norm
+        cross_block = dense_block + attn + norm + 1  # xattn + lnx + xgate
+
+        def ssm_block():
+            di, ds, nh = self.ssm_d_inner, self.ssm_state, self.ssm_heads
+            ch = di + 2 * ds
+            return (norm                              # ln
+                    + d * (2 * di + 2 * ds + nh)      # in_proj
+                    + self.ssm_conv_width * ch + ch   # conv w + b
+                    + 3 * nh                          # A_log, dt_bias, D
+                    + di                              # norm_scale
+                    + di * d)                         # out_proj
+
+        if self.family == "dense":
+            return emb + norm + self.num_layers * dense_block
+        if self.family == "vlm":
+            n_cross = (self.num_layers // self.cross_attn_every
+                       if self.cross_attn_every else 0)
+            n_self = self.num_layers - n_cross
+            return (emb + norm + n_self * dense_block
+                    + n_cross * cross_block)
+        if self.family == "moe":
+            moe_mlp = (self.num_experts * mlp_mult * d * self.moe_d_ff
+                       + d * self.num_experts)
+            return emb + norm + self.num_layers * (attn + moe_mlp + 2 * norm)
+        if self.family == "ssm":
+            return emb + norm + self.num_layers * ssm_block()
+        if self.family == "hybrid":
+            return (emb + norm + self.num_layers * ssm_block()
+                    + dense_block)
+        if self.family == "encdec":
+            enc = self.encoder_layers * dense_block + self.encoder_seq * d
+            dec = self.num_layers * cross_block
+            return emb + 2 * norm + enc + dec
+        return emb + self.num_layers * dense_block
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE uses top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        mlp_mult = 3 if self.glu else 2
+        total = self.param_count()
+        all_experts = self.num_experts * mlp_mult * d * self.moe_d_ff
+        active = self.experts_per_token * mlp_mult * d * self.moe_d_ff
+        return total - self.num_layers * (all_experts - active)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (input-shape) cell."""
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_serve(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+# The four assigned LM shapes (identical across all ten archs).
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", "train", 4096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    ShapeConfig("decode_32k", "decode", 32768, 128),
+    ShapeConfig("long_500k", "decode", 524288, 1),
+)
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+
+SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+@dataclass(frozen=True)
+class ChameleonConfig:
+    """Paper hyperparameters (§4, §5, §7.1)."""
+    enabled: bool = True
+    hbm_budget_bytes: int = 16 * 1024 ** 3      # v5e HBM per chip
+    host_link_gbps: float = 32.0                 # Eq 3 bandwidth B (GB/s)
+    m_warmup_stable: int = 2                     # Algo 1 `m`
+    n_genpolicy_steps: int = 5                   # Algo 1 `n`
+    len_change_threshold: float = 0.05           # 5% length diff
+    cos_sim_threshold: float = 0.95              # 95% cosine similarity
+    score_coef_c: float = 1.0                    # Eq 2 `C`
+    groups_per_phase: int = 0                    # 0 -> num_layers (Fig 4 insight)
+    offload_mode: str = "exact"                  # exact | compressed (int8, beyond-paper)
+    allow_remat_fallback: bool = True            # beyond-paper: 3-way save/offload/remat
+    peak_flops: float = 197e12                   # v5e bf16
+    hbm_gbps: float = 819.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    learning_rate: float = 3e-4
+    warmup_steps: int = 10
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    loss_scale: float = 2.0 ** 15                # dynamic loss scaling (op-seq change source)
+    loss_scale_dynamic: bool = True
+    eval_every: int = 0                          # on-the-fly validation (op-seq change source)
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    zero_stage: int = 2                          # 0,1,2,3
+    grad_compression: str = "none"               # none | int8_ef (cross-pod)
+    seed: int = 0

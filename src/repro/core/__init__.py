@@ -1,0 +1,6 @@
+"""Chameleon core — the paper's contribution as a composable JAX module."""
+from repro.core.executor import AppliedPolicy, Executor  # noqa: F401
+from repro.core.policy import ChameleonOOMError, SwapPolicy, generate_policy  # noqa: F401
+from repro.core.profiler import ProfileData, profile_jaxpr  # noqa: F401
+from repro.core.runtime import ChameleonRuntime  # noqa: F401
+from repro.core.stages import Stage, StageMachine  # noqa: F401

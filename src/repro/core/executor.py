@@ -1,0 +1,110 @@
+"""Executor (paper §6): apply a generated SwapPolicy to the training program.
+
+On TPU/XLA the application mechanism is a ``save_and_offload_only_these_names``
+remat policy threaded into the model's scanned blocks and a re-``jit`` of the
+step — the compile-time analogue of re-routing the dispatch stream.  XLA's
+static schedule plays the role of the paper's custom recordStream: the
+simulator's swap-out completion points become buffer release points that the
+latency-hiding scheduler honors without host polling (§6.2); we additionally
+donate input buffers so optimizer-state memory is reused in place.
+
+``offload_mode="compressed"`` (beyond-paper, CSWAP-inspired) wraps offloaded
+sites in an int8 quantize/dequantize pair so swapped tensors cross the host
+link at half/quarter width — see ``repro.kernels.quant_offload``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, Optional, Sequence, Set
+
+import jax
+
+from repro.common.config import ChameleonConfig
+from repro.core.policy import SwapPolicy
+from repro.core.profiler import ProfileData
+from repro.core.sites import OFFLOAD_SITES
+
+# Sites that are cheap to recompute from their saved neighbors (elementwise):
+# the beyond-paper 3-way save/offload/remat decision drops these from the
+# saved set when host bandwidth is the binding constraint.
+CHEAP_RECOMPUTE_SITES: Set[str] = {"ffn_act", "ssm_gate", "ln_in"}
+
+
+def jax_offload_policy(offload_sites: Iterable[str],
+                       save_sites: Iterable[str]):
+    return jax.checkpoint_policies.save_and_offload_only_these_names(
+        names_which_can_be_saved=sorted(set(save_sites)),
+        names_which_can_be_offloaded=sorted(set(offload_sites)),
+        offload_src="device", offload_dst="pinned_host")
+
+
+def jax_save_policy(save_sites: Iterable[str]):
+    return jax.checkpoint_policies.save_only_these_names(
+        *sorted(set(save_sites)))
+
+
+@dataclass
+class AppliedPolicy:
+    swap: Optional[SwapPolicy]
+    offload: Set[str]
+    save: Set[str]
+    remat: Set[str]
+    fingerprint: str
+    raw: bool = False    # save *everything* incl. untagged f32 temporaries
+
+    def to_jax(self):
+        if self.raw:
+            return None  # no checkpoint wrapper at all
+        if not self.offload:
+            return jax_save_policy(self.save)
+        return jax_offload_policy(self.offload, self.save)
+
+
+class Executor:
+    def __init__(self, cfg: ChameleonConfig):
+        self.cfg = cfg
+
+    def site_universe(self, prof: Optional[ProfileData]) -> Set[str]:
+        if prof is None:
+            return set(OFFLOAD_SITES)
+        sites = {t.site for t in prof.candidates if t.site}
+        return sites or set(OFFLOAD_SITES)
+
+    def lower(self, swap: SwapPolicy, prof: ProfileData,
+              remat_fallback: Optional[bool] = None) -> AppliedPolicy:
+        """SwapPolicy (per-tensor decisions) -> site-level applied policy."""
+        offload = swap.offload_sites(prof)
+        universe = self.site_universe(prof)
+        save = universe - offload
+        remat: Set[str] = set()
+        use_remat = (self.cfg.allow_remat_fallback
+                     if remat_fallback is None else remat_fallback)
+        if use_remat:
+            remat = (save & CHEAP_RECOMPUTE_SITES)
+            save -= remat
+        fp = ("off=" + ",".join(sorted(offload))
+              + "|save=" + ",".join(sorted(save)))
+        return AppliedPolicy(swap, offload, save, remat, fp)
+
+    def conservative(self, prof: Optional[ProfileData] = None) -> AppliedPolicy:
+        """WarmUp-stage fallback: offload every candidate site (guaranteed
+        fit analogue of passive swap; see core.oom for the targeted loop)."""
+        universe = self.site_universe(prof)
+        return AppliedPolicy(None, set(universe), set(), set(),
+                             "warmup-offload-all")
+
+    def baseline(self) -> AppliedPolicy:
+        """PyTorch-equivalent no-swap baseline: every named activation site
+        is saved in its stored dtype; elementwise internals (f32 upcasts of
+        norms/rope/softmax) are recomputed in the backward — what fused
+        autograd kernels do.  This is the program the profiler traces and
+        the memory curve the MRL is built from (Fig 3)."""
+        return AppliedPolicy(None, set(), set(OFFLOAD_SITES), set(),
+                             "baseline-save-sites")
+
+    def raw(self) -> AppliedPolicy:
+        """Save-everything (no remat wrapper): upper bound on activation
+        memory; reported in benches for contrast, never used as the paper
+        baseline."""
+        return AppliedPolicy(None, set(), set(OFFLOAD_SITES), set(),
+                             "raw-save-everything", raw=True)

@@ -1,0 +1,119 @@
+"""Multi-feature fuzzy matching (paper §6.1 + Appendix A).
+
+Across retraces there are no stable tensor identities; policy entries are
+re-associated with the new program's site instances using integer-only
+feature comparison (the paper's trick: one-hot operator tags + bit-packed
+call stacks instead of string compares).
+
+Features per instance, packed into a single int64:
+  bits  0..31  site one-hot   (site vocabulary maps to 32 bits, like the
+                               paper's "32 most frequent operators")
+  bits 32..39  dtype code
+  bits 40..55  shape hash     (16-bit product/dim mix)
+  bits 56..63  position bucket (birth op / n_ops quantized to 256)
+
+Exact match requires identical site bit + dtype + shape hash; position may
+drift by up to ``pos_tolerance`` buckets (minor sequence changes shift op
+indices slightly — the tolerance is what lets Chameleon ride out small
+changes without regenerating the policy).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.profiler import ProfileData, TensorInstance
+from repro.core.sites import SITE_INDEX
+
+
+def _site_bit(site: Optional[str]) -> int:
+    if site is None:
+        return 0
+    return 1 << (SITE_INDEX.get(site, hash(site) & 31) % 32)
+
+
+def _shape_hash(shape: Tuple[int, ...]) -> int:
+    h = 0
+    for d in shape:
+        h = (h * 131 + d) & 0xFFFF
+    return h
+
+
+def pack_features(t: TensorInstance, n_ops: int) -> int:
+    pos = min(int(t.birth * 256 / max(n_ops, 1)), 255)
+    return (_site_bit(t.site)
+            | (t.dtype_code & 0xFF) << 32
+            | _shape_hash(t.shape) << 40
+            | pos << 56)
+
+
+_EXACT_MASK = (1 << 56) - 1          # site | dtype | shape
+_POS_SHIFT = 56
+
+
+@dataclass
+class MatchResult:
+    mapping: Dict[int, int]          # old uid -> new uid
+    unmatched: List[int]             # old uids with no counterpart
+    moved: int                       # matched but position drifted
+
+
+def match_instances(old: ProfileData, new: ProfileData,
+                    pos_tolerance: int = 16) -> MatchResult:
+    """Associate old candidate instances with new ones (integer compares
+    only; layer index breaks ties among identical features)."""
+    new_feats: Dict[int, List[TensorInstance]] = {}
+    for t in new.candidates:
+        key = pack_features(t, new.n_ops) & _EXACT_MASK
+        new_feats.setdefault(key, []).append(t)
+    for lst in new_feats.values():
+        lst.sort(key=lambda t: (t.layer, t.birth))
+
+    mapping: Dict[int, int] = {}
+    unmatched: List[int] = []
+    moved = 0
+    used: set = set()
+    for t in old.candidates:
+        f = pack_features(t, old.n_ops)
+        key = f & _EXACT_MASK
+        pos = f >> _POS_SHIFT
+        best = None
+        best_d = None
+        for c in new_feats.get(key, ()):  # integer comparisons only
+            if c.uid in used:
+                continue
+            cpos = pack_features(c, new.n_ops) >> _POS_SHIFT
+            d = abs(int(cpos) - int(pos)) + (0 if c.layer == t.layer else 1)
+            if d <= pos_tolerance and (best_d is None or d < best_d):
+                best, best_d = c, d
+        if best is None:
+            unmatched.append(t.uid)
+        else:
+            used.add(best.uid)
+            mapping[t.uid] = best.uid
+            if best_d:
+                moved += 1
+    return MatchResult(mapping, unmatched, moved)
+
+
+def remap_policy(policy, old: ProfileData, new: ProfileData,
+                 pos_tolerance: int = 16):
+    """Carry a SwapPolicy across a *minor* sequence change by re-pointing
+    its entries at the matched new instances.  Returns (entries, hit_rate);
+    the caller regenerates the policy when hit_rate is low (the stage
+    machine will already be back in WarmUp for major changes)."""
+    res = match_instances(old, new, pos_tolerance)
+    by_uid = {t.uid: t for t in new.candidates}
+    remapped = []
+    for e in policy.entries:
+        nid = res.mapping.get(e.uid)
+        if nid is None:
+            continue
+        t = by_uid[nid]
+        ne = type(e)(t.uid, t.site, t.layer, t.nbytes, t.birth, t.death,
+                     e.swap_in_op, e.swap_out_done_op, e.stalled, e.score)
+        remapped.append(ne)
+    hit = len(remapped) / max(len(policy.entries), 1)
+    return remapped, hit

@@ -1,0 +1,45 @@
+"""Memory Reduction List (paper §5.2).
+
+One entry per operator inside an over-budget region:
+``op index -> bytes that must be absent from device memory at that op``.
+Kept as parallel numpy arrays; the simulator decrements ranges as swaps are
+scheduled (§5.4.1) and the policy loop (Algo 2) runs until the list clears.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.memtrace import MemoryTimeline, over_budget_ops
+
+
+@dataclass
+class MRL:
+    ops: np.ndarray        # sorted op indices with an MRE
+    required: np.ndarray   # remaining required reduction per op (bytes)
+
+    @classmethod
+    def from_timeline(cls, tl: MemoryTimeline, budget: int) -> "MRL":
+        ops, req = over_budget_ops(tl, budget)
+        return cls(ops, req.astype(np.int64))
+
+    def is_empty(self) -> bool:
+        return bool(np.all(self.required <= 0))
+
+    @property
+    def remaining_ops(self) -> np.ndarray:
+        return self.ops[self.required > 0]
+
+    def covered_count(self, birth: int, death: int) -> int:
+        """Number of outstanding MREs inside [birth, death)."""
+        m = (self.ops >= birth) & (self.ops < death) & (self.required > 0)
+        return int(np.count_nonzero(m))
+
+    def decrement(self, birth: int, death: int, nbytes: int) -> None:
+        """Tensor of `nbytes` leaves the device for ops in [birth, death)."""
+        m = (self.ops >= birth) & (self.ops < death)
+        self.required[m] -= nbytes
+
+    def max_required(self) -> int:
+        return int(self.required.max(initial=0))

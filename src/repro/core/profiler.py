@@ -1,0 +1,295 @@
+"""Lightweight online profiler — Detailed mode (§4).
+
+Walks the traced step's jaxpr (scans virtually unrolled so op indices match
+the physical device op stream) and produces:
+
+  * the operator stream (for logical-layer grouping, Eq 1),
+  * tensor instances with liveness (birth/death op indices) — including the
+    per-slice sawtooth liveness of scan residuals, which is what makes the
+    reconstructed no-swap memory curve look like the paper's Fig 3,
+  * the candidate site instances (``checkpoint_name``-tagged residuals),
+  * one measured iteration time ``T_iter`` (a single wall-clock number — the
+    paper's key constraint: **no per-operator timings are ever collected**).
+
+Static memory (params, optimizer state = jit invars) is excluded from the
+dynamic timeline: the paper builds on DeepSpeed/ZeRO for static memory and
+swaps *dynamic* memory; we mirror that split (ZeRO sharding lives in
+``repro.optim``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.sites import base_site
+from repro.core.tokenizer import GLOBAL_VOCAB, OpVocab, _sub_jaxprs, _unwrap
+
+MIN_TRACK_BYTES = 1 << 10
+
+_DTYPE_CODES: Dict[str, int] = {}
+
+
+def dtype_code(dt) -> int:
+    s = str(dt)
+    if s not in _DTYPE_CODES:
+        _DTYPE_CODES[s] = len(_DTYPE_CODES) + 1
+    return _DTYPE_CODES[s]
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+@dataclass
+class TensorInstance:
+    uid: int
+    nbytes: int
+    birth: int                 # expanded op index where allocated
+    death: int                 # expanded op index of last use
+    site: Optional[str] = None  # canonical site name (tagged residuals)
+    layer: int = -1             # scan slice index (-1 = whole tensor)
+    dtype_code: int = 0
+    shape: Tuple[int, ...] = ()
+    producer_token: int = 0
+
+    @property
+    def is_candidate(self) -> bool:
+        return self.site is not None
+
+
+@dataclass
+class ProfileData:
+    op_tokens: np.ndarray               # expanded op stream
+    tensors: List[TensorInstance]
+    t_iter: float                       # measured iteration wall time (s)
+    static_bytes: int                   # params/opt-state resident bytes
+    n_ops: int = 0
+    scan_layers: int = 0                # main stack length (0 = unrolled)
+
+    def __post_init__(self):
+        self.n_ops = int(len(self.op_tokens))
+
+    @property
+    def candidates(self) -> List[TensorInstance]:
+        return [t for t in self.tensors if t.is_candidate]
+
+
+# --------------------------------------------------------------------------
+def _count_ops(jaxpr, cache) -> int:
+    j = _unwrap(jaxpr)
+    key = id(j)
+    if key in cache:
+        return cache[key]
+    total = 0
+    for eqn in j.eqns:
+        if eqn.primitive.name == "scan":
+            total += eqn.params.get("length", 1) * _count_ops(
+                eqn.params["jaxpr"], cache)
+            continue
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            total += sum(_count_ops(s, cache) for s in subs)
+        else:
+            total += 1
+    cache[key] = total
+    return total
+
+
+def _emit_tokens(jaxpr, vocab, out, cache):
+    j = _unwrap(jaxpr)
+    for eqn in j.eqns:
+        if eqn.primitive.name == "scan":
+            L = eqn.params.get("length", 1)
+            body = eqn.params["jaxpr"]
+            one = []
+            _emit_tokens(body, vocab, one, cache)
+            out.extend(one * L)
+            continue
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for s in subs:
+                _emit_tokens(s, vocab, out, cache)
+            continue
+        out.append(vocab.id(eqn.primitive.name))
+
+
+def _find_site_outputs(scan_eqn) -> Dict[int, Tuple[str, Tuple[int, ...], int]]:
+    """Map stacked-output position -> (site, slice shape, dtype code) for
+    ``name``-tagged residuals of a scan (searching nested scans one level)."""
+    body = _unwrap(scan_eqn.params["jaxpr"])
+    num_carry = scan_eqn.params.get("num_carry", 0)
+    ys_vars = list(body.outvars[num_carry:])
+    named: Dict[int, Tuple[str, Tuple[int, ...], int]] = {}
+
+    # direct var-identity match first, then unique aval match
+    names = []
+    def collect(j):
+        for eqn in j.eqns:
+            if eqn.primitive.name == "name":
+                names.append((eqn.params["name"], eqn.outvars[0]))
+            elif eqn.primitive.name == "scan":
+                collect(_unwrap(eqn.params["jaxpr"]))
+            else:
+                for s in _sub_jaxprs(eqn):
+                    collect(_unwrap(s))
+    collect(body)
+
+    taken = set()
+    # pass 1: identity matches
+    pending = []
+    for nm, var in names:
+        site = base_site(nm)
+        hit = False
+        for pos, yv in enumerate(ys_vars):
+            if pos not in taken and yv is var:
+                named[pos] = (site, tuple(var.aval.shape),
+                              dtype_code(var.aval.dtype))
+                taken.add(pos)
+                hit = True
+                break
+        if not hit:
+            pending.append((site, var))
+    # pass 2: in-order greedy aval match (names and ys both follow body
+    # equation order, so sequential assignment resolves same-shape ties —
+    # e.g. gate/up both tagged ffn_pre, or the resid_* family)
+    cursor = 0
+    for site, var in pending:
+        vshape, vdt = tuple(var.aval.shape), var.aval.dtype
+        for pos in list(range(cursor, len(ys_vars))) + list(range(0, cursor)):
+            if pos in taken:
+                continue
+            yv = ys_vars[pos]
+            yshape = tuple(yv.aval.shape)
+            if yv.aval.dtype == vdt and (
+                    yshape == vshape
+                    or (len(yshape) > len(vshape)
+                        and yshape[-len(vshape):] == vshape)):
+                named[pos] = (site, yshape[1:], dtype_code(yv.aval.dtype))
+                taken.add(pos)
+                cursor = pos + 1
+                break
+    return named
+
+
+def profile_jaxpr(closed_jaxpr, t_iter: float,
+                  vocab: OpVocab = GLOBAL_VOCAB,
+                  min_track_bytes: int = MIN_TRACK_BYTES) -> ProfileData:
+    """Detailed-mode walk of the (baseline, policy-free) train-step jaxpr."""
+    j = _unwrap(closed_jaxpr)
+    cache: Dict[int, int] = {}
+
+    # ---- pass A: expanded op stream + per-top-level-eqn spans
+    tokens: List[int] = []
+    spans = []  # (eqn, start, end, iter_spans|None)
+    cursor = 0
+    for eqn in j.eqns:
+        start = cursor
+        if eqn.primitive.name == "scan":
+            L = eqn.params.get("length", 1)
+            per = _count_ops(eqn.params["jaxpr"], cache)
+            one: List[int] = []
+            _emit_tokens(eqn.params["jaxpr"], vocab, one, cache)
+            tokens.extend(one * L)
+            cursor += per * L
+            iter_spans = [(start + i * per, start + (i + 1) * per)
+                          for i in range(L)]
+            spans.append((eqn, start, cursor, iter_spans))
+        else:
+            subs = _sub_jaxprs(eqn)
+            if subs:
+                sub_out: List[int] = []
+                for s in subs:
+                    _emit_tokens(s, vocab, sub_out, cache)
+                if not sub_out:
+                    sub_out = [vocab.id(eqn.primitive.name)]
+                tokens.extend(sub_out)
+                cursor += len(sub_out)
+            else:
+                tokens.append(vocab.id(eqn.primitive.name))
+                cursor += 1
+            spans.append((eqn, start, cursor, None))
+    n_ops = cursor
+
+    # ---- pass B: top-level liveness
+    producer: Dict[object, int] = {}           # var -> spans index
+    consumers: Dict[object, List[int]] = {}
+    for si, (eqn, *_rest) in enumerate(spans):
+        for v in eqn.invars:
+            if hasattr(v, "aval") and not hasattr(v, "val"):  # skip Literals
+                consumers.setdefault(v, []).append(si)
+        for v in eqn.outvars:
+            producer[v] = si
+
+    static_bytes = sum(_nbytes(v.aval) for v in j.invars)
+
+    tensors: List[TensorInstance] = []
+    uid = 0
+    scan_layers = 0
+    for v, psi in producer.items():
+        nb = _nbytes(v.aval)
+        if nb < min_track_bytes:
+            continue
+        eqn, pstart, pend, piters = spans[psi]
+        cons = consumers.get(v, [])
+        if not cons:  # jaxpr output: lives to the end
+            death = n_ops
+            last_ci = None
+        else:
+            last_ci = max(cons)
+            death = spans[last_ci][1]  # start of last consuming eqn
+
+        # scan residual with per-slice sawtooth liveness?
+        sliced = False
+        if piters is not None and len(v.aval.shape) >= 1:
+            L = len(piters)
+            if v.aval.shape[0] == L and L > 1:
+                site_map = _find_site_outputs(eqn)
+                num_carry = eqn.params.get("num_carry", 0)
+                try:
+                    pos = list(eqn.outvars).index(v) - num_carry
+                except ValueError:
+                    pos = -1
+                site = None
+                if pos >= 0 and pos in site_map:
+                    site = site_map[pos][0]
+                # death side: reverse scan consumes slice i at iter L-1-i
+                cons_iters = None
+                if last_ci is not None:
+                    ceqn, cstart, cend, citers = spans[last_ci]
+                    if citers is not None and len(citers) == L:
+                        cons_iters = citers
+                        rev = bool(ceqn.params.get("reverse", False))
+                per_slice = nb // L
+                if per_slice >= min_track_bytes:
+                    scan_layers = max(scan_layers, L)
+                    for i in range(L):
+                        if cons_iters is not None:
+                            d = cons_iters[L - 1 - i][0] if rev else cons_iters[i][0]
+                        else:
+                            d = death
+                        tensors.append(TensorInstance(
+                            uid, per_slice, piters[i][1], d, site=site,
+                            layer=i,
+                            dtype_code=dtype_code(v.aval.dtype),
+                            shape=tuple(v.aval.shape[1:]),
+                            producer_token=vocab.id("scan")))
+                        uid += 1
+                    sliced = True
+        if not sliced:
+            site = None
+            if eqn.primitive.name == "name":
+                site = base_site(eqn.params["name"])
+            tensors.append(TensorInstance(
+                uid, nb, pend, death, site=site,
+                dtype_code=dtype_code(v.aval.dtype),
+                shape=tuple(v.aval.shape),
+                producer_token=vocab.id(eqn.primitive.name)))
+            uid += 1
+
+    return ProfileData(np.asarray(tokens, np.int32), tensors, t_iter,
+                       static_bytes, scan_layers=scan_layers)

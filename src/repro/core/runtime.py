@@ -1,0 +1,217 @@
+"""ChameleonRuntime — ties profiler, stage machine, policy generator and
+executor into the per-iteration loop (paper Fig. 2).
+
+Protocol (driven by ``repro.runtime.trainer.Trainer``):
+
+    rt = ChameleonRuntime(cham_cfg, step_builder)
+    rt.prepare(example_args)                  # WarmUp fit (Algo 3, proactive)
+    for it in range(steps):
+        fn = rt.step_fn()                     # current applied policy
+        t0 = time(); out = fn(*args); block(); dt = time() - t0
+        rt.record_dispatch("train", fn, args) # Lightweight-mode op stream
+        ... (any extra dispatches: eval, optimizer-skip, ... recorded too)
+        rt.end_iteration(dt)                  # Algo 1 stage machine
+
+During GenPolicy the runtime generates one policy variant per step (varying
+the logical-layer grouping knob) and, after n steps, keeps the variant with
+the best measured iteration time — the paper's §7.1 "generates five policies
+and selects the one with the best runtime performance".
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.common.config import ChameleonConfig
+from repro.core import tokenizer
+from repro.core.executor import AppliedPolicy, Executor
+from repro.core.memtrace import build_timeline
+from repro.core.oom import warmup_offload_sites
+from repro.core.policy import ChameleonOOMError, SwapPolicy, generate_policy
+from repro.core.profiler import ProfileData, profile_jaxpr
+from repro.core.stages import Stage, StageMachine
+
+# grouping knobs tried across the n GenPolicy steps (variant selection)
+VARIANT_KNOBS = (1.0, 2.0, 0.5, 4.0, 0.25)
+
+
+@dataclass
+class PolicyVariant:
+    applied: AppliedPolicy
+    swap: Optional[SwapPolicy]
+    knob: float
+    measured_t: Optional[float] = None
+
+
+class ChameleonRuntime:
+    def __init__(self, cfg: ChameleonConfig,
+                 step_builder: Callable[[Optional[Any]], Callable],
+                 budget: Optional[int] = None):
+        self.cfg = cfg
+        self.budget = budget if budget is not None else cfg.hbm_budget_bytes
+        self.step_builder = step_builder
+        self.executor = Executor(cfg)
+        self.machine = StageMachine(cfg)
+        self._step_cache: Dict[str, Callable] = {}
+        self._trace_cache: Dict[Tuple, np.ndarray] = {}
+        self._jaxpr_cache: Dict[Tuple, Any] = {}
+        self.applied: AppliedPolicy = self.executor.baseline()
+        self.profile: Optional[ProfileData] = None
+        self.baseline_profile: Optional[ProfileData] = None
+        self._iter_streams: List[np.ndarray] = []
+        self._example_args: Optional[tuple] = None
+        self.variants: List[PolicyVariant] = []
+        self._pending_variant: Optional[PolicyVariant] = None
+        self.best: Optional[PolicyVariant] = None
+        self.step_idx = 0
+        self.history: List[dict] = []
+        self.profiling_overhead_s = 0.0
+
+    # ------------------------------------------------------------ helpers
+    def _args_key(self, args) -> Tuple:
+        import jax
+        leaves = jax.tree_util.tree_leaves(args)
+        return tuple((getattr(x, "shape", None), str(getattr(x, "dtype", "")))
+                     for x in leaves)
+
+    def _baseline_jaxpr(self, args):
+        """Trace the no-swap baseline program (save-sites policy — the
+        PyTorch-autograd-equivalent memory behavior, see Executor.baseline)."""
+        key = ("baseline",) + self._args_key(args)
+        if key not in self._jaxpr_cache:
+            import jax
+            fn = self.step_builder(self.executor.baseline().to_jax())
+            self._jaxpr_cache[key] = jax.make_jaxpr(
+                fn.__wrapped__ if hasattr(fn, "__wrapped__") else fn)(*args)
+        return self._jaxpr_cache[key]
+
+    def _get_step(self, applied: AppliedPolicy) -> Callable:
+        fn = self._step_cache.get(applied.fingerprint)
+        if fn is None:
+            fn = self.step_builder(applied.to_jax())
+            self._step_cache[applied.fingerprint] = fn
+        return fn
+
+    # -------------------------------------------------------------- setup
+    def prepare(self, example_args: tuple) -> AppliedPolicy:
+        """WarmUp entry: proactive Algo-3 fit so the first iterations never
+        OOM while profiling data accumulates."""
+        self._example_args = example_args
+        if not self.cfg.enabled:
+            return self.applied
+        cj = self._baseline_jaxpr(example_args)
+        prof = profile_jaxpr(cj, t_iter=1.0)   # timing unknown pre-run; the
+        self.baseline_profile = prof           # warm-up fit is memory-only
+        tl = build_timeline(prof)
+        if tl.peak > self.budget:
+            try:
+                sites = warmup_offload_sites(prof, self.cfg, self.budget)
+                self.applied = AppliedPolicy(None, sites,
+                                             self.executor.site_universe(prof)
+                                             - sites, set(),
+                                             "warmup:" + ",".join(sorted(sites)))
+            except ChameleonOOMError:
+                self.applied = self.executor.conservative(prof)
+        else:
+            self.applied = self.executor.baseline()
+        return self.applied
+
+    # ------------------------------------------------------ per-iteration
+    def step_fn(self) -> Callable:
+        return self._get_step(self.applied)
+
+    def record_dispatch(self, name: str, fn: Callable, args: tuple) -> None:
+        """Lightweight mode: token stream of this dispatch (trace cached by
+        arg shapes, so steady-state cost is a dict lookup + append)."""
+        t0 = time.perf_counter()
+        key = (name, self.applied.fingerprint) + self._args_key(args)
+        toks = self._trace_cache.get(key)
+        if toks is None:
+            import jax
+            try:
+                traced = fn.trace(*args)          # jitted fn
+                cj = traced.jaxpr
+            except AttributeError:
+                cj = jax.make_jaxpr(fn)(*args)
+            toks = tokenizer.tokenize_jaxpr(cj)
+            self._trace_cache[key] = toks
+        self._iter_streams.append(toks)
+        if name == "train":
+            self._last_train_args = args
+        self.profiling_overhead_s += time.perf_counter() - t0
+
+    def end_iteration(self, t_iter: float) -> Stage:
+        t0 = time.perf_counter()
+        sig = tokenizer.sequence_signature(self._iter_streams)
+        self._iter_streams = []
+        prev_stage = self.machine.stage
+        stage = self.machine.observe(sig, self.step_idx)
+        self.step_idx += 1
+
+        # a variant ran this iteration: record its measured time
+        if self._pending_variant is not None:
+            self._pending_variant.measured_t = t_iter
+            self._pending_variant = None
+
+        if stage is Stage.GENPOLICY:
+            self._genpolicy_step(t_iter)
+        elif stage is Stage.STABLE and prev_stage is Stage.GENPOLICY:
+            self._select_best()
+        elif stage is Stage.WARMUP and prev_stage is not Stage.WARMUP:
+            # sequence changed: back to the conservative fit (Fig 2 loop)
+            self.variants, self.best = [], None
+            if self._example_args is not None:
+                args = getattr(self, "_last_train_args", self._example_args)
+                self._jaxpr_cache.clear()
+                self.prepare(args)
+        self.history.append({"step": self.step_idx, "stage": stage.value,
+                             "policy": self.applied.fingerprint,
+                             "t_iter": t_iter})
+        self.profiling_overhead_s += time.perf_counter() - t0
+        return stage
+
+    # ----------------------------------------------------- GenPolicy path
+    def _genpolicy_step(self, t_iter: float) -> None:
+        args = getattr(self, "_last_train_args", self._example_args)
+        if args is None:
+            return
+        cj = self._baseline_jaxpr(args)
+        prof = profile_jaxpr(cj, t_iter=t_iter)   # Detailed mode
+        self.profile = prof
+        import dataclasses
+        knob = VARIANT_KNOBS[len(self.variants) % len(VARIANT_KNOBS)]
+        groups = max(1, int((prof.scan_layers or 32) * knob))
+        cfg_v = dataclasses.replace(self.cfg, groups_per_phase=groups)
+        tl = build_timeline(prof)
+        try:
+            if tl.peak > self.budget:
+                swap = generate_policy(prof, cfg_v, self.budget, timeline=tl)
+                applied = self.executor.lower(swap, prof)
+            else:
+                swap, applied = None, self.executor.baseline()
+        except ChameleonOOMError:
+            swap, applied = None, self.executor.conservative(prof)
+        var = PolicyVariant(applied, swap, knob)
+        self.variants.append(var)
+        self._pending_variant = var
+        self.applied = applied                     # next iteration runs it
+
+    def _select_best(self) -> None:
+        timed = [v for v in self.variants if v.measured_t is not None]
+        if timed:
+            self.best = min(timed, key=lambda v: v.measured_t)
+            self.applied = self.best.applied
+
+    # ----------------------------------------------------------- reports
+    def stats(self) -> dict:
+        return {
+            "stage": self.machine.stage.value,
+            "transitions": list(self.machine.transitions),
+            "n_variants": len(self.variants),
+            "best_knob": self.best.knob if self.best else None,
+            "applied": self.applied.fingerprint,
+            "profiling_overhead_s": self.profiling_overhead_s,
+        }

@@ -1,0 +1,191 @@
+"""Global swap simulator (paper §5.4).
+
+Logical layers: the operator stream is split into evenly sized groups per
+phase (forward = ops before the memory peak, backward+optimizer = after).
+Eq. 1 assigns every group the average group time
+``T̄_group = T_iter / N_iter × N_group`` — the Fig-4 insight that makes the
+whole system work *without per-operator timings*.  Each layer's
+``remaining_time`` is the transfer budget that can overlap its compute.
+
+Swap-in (§5.4.1): search **backward** from the logical layer preceding the
+tensor's first backward use, stopping at the peak, for a layer with
+``T_remaining > T_swap`` (Eq. 3: ``T_swap = S/B``).  If nothing fits, the
+highest-score candidate is still swapped (stalled) right before first use —
+preferable to OOM.
+
+Swap-out (§5.4.2): triggered at last forward use; completion layer found
+searching **forward** for spare transfer budget; this release point feeds the
+custom-recordStream analogue (early reuse) and the Fig-8 metric.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.common.config import ChameleonConfig
+from repro.core.candidates import Candidate
+from repro.core.mrl import MRL
+from repro.core.profiler import ProfileData
+
+
+@dataclass
+class LogicalLayer:
+    index: int
+    start_op: int
+    end_op: int
+    kind: str                     # FWD | BWD | OPT
+    remaining_time: float
+    candidates: List[int] = field(default_factory=list)   # tensor uids
+
+
+@dataclass
+class PolicyEntry:
+    uid: int
+    site: Optional[str]
+    layer: int                    # scan slice index of the residual
+    nbytes: int
+    birth: int
+    death: int
+    swap_in_op: int               # op index where swap-in is pre-triggered
+    swap_out_done_op: int = -1    # op index where swap-out completes
+    stalled: bool = False
+    score: float = 0.0
+
+    @property
+    def t_swap(self):             # filled by simulator for reporting
+        return getattr(self, "_t_swap", 0.0)
+
+
+class Simulator:
+    def __init__(self, prof: ProfileData, peak_op: int, cfg: ChameleonConfig):
+        self.prof = prof
+        self.cfg = cfg
+        self.peak_op = peak_op
+        self.bandwidth = cfg.host_link_gbps * 1e9        # B in Eq. 3
+        self.layers = self._build_layers()
+        self._starts = [l.start_op for l in self.layers]
+        self.stall_time = 0.0
+
+    # ------------------------------------------------------------- layers
+    def _build_layers(self) -> List[LogicalLayer]:
+        n = self.prof.n_ops
+        t_op = self.prof.t_iter / max(n, 1)              # Eq. 1 per-op average
+        G = self.cfg.groups_per_phase or self.prof.scan_layers or 32
+        layers: List[LogicalLayer] = []
+
+        def split(lo: int, hi: int, kind: str):
+            total = hi - lo
+            if total <= 0:
+                return
+            g = min(G, total)
+            base, rem = divmod(total, g)
+            cur = lo
+            for i in range(g):
+                size = base + (1 if i < rem else 0)
+                layers.append(LogicalLayer(
+                    len(layers), cur, cur + size, kind,
+                    remaining_time=size * t_op))
+                cur += size
+
+        split(0, self.peak_op, "FWD")
+        split(self.peak_op, n, "BWD")
+        if layers:
+            layers[-1].kind = "OPT"
+        return layers
+
+    def layer_of(self, op: int) -> int:
+        i = bisect.bisect_right(self._starts, op) - 1
+        return max(0, min(i, len(self.layers) - 1))
+
+    def t_swap(self, nbytes: int) -> float:
+        return nbytes / self.bandwidth                    # Eq. 3
+
+    # -------------------------------------------------- §5.4.1 swap-in
+    def place_swap_in(self, cand: Candidate) -> Optional[PolicyEntry]:
+        t = cand.tensor
+        ts = self.t_swap(t.nbytes)
+        first_use_layer = self.layer_of(t.death)
+        peak_layer = self.layer_of(self.peak_op)
+        for li in range(first_use_layer - 1, peak_layer, -1):
+            lay = self.layers[li]
+            if lay.remaining_time > ts:
+                lay.remaining_time -= ts
+                lay.candidates.append(t.uid)
+                e = PolicyEntry(t.uid, t.site, t.layer, t.nbytes, t.birth,
+                                t.death, swap_in_op=lay.start_op,
+                                score=cand.score)
+                e._t_swap = ts
+                return e
+        return None
+
+    def place_stalled(self, cand: Candidate) -> PolicyEntry:
+        """Fallback: swap anyway right before first use, accept the stall."""
+        t = cand.tensor
+        ts = self.t_swap(t.nbytes)
+        li = max(self.layer_of(t.death) - 1, 0)
+        lay = self.layers[li]
+        stall = max(0.0, ts - max(lay.remaining_time, 0.0))
+        lay.remaining_time -= ts
+        lay.candidates.append(t.uid)
+        self.stall_time += stall
+        e = PolicyEntry(t.uid, t.site, t.layer, t.nbytes, t.birth, t.death,
+                        swap_in_op=lay.start_op, stalled=True,
+                        score=cand.score)
+        e._t_swap = ts
+        return e
+
+    # ------------------------------------------------- Algo 2 inner loop
+    def simulate(self, cl: List[Candidate], mrl: MRL) -> List[PolicyEntry]:
+        entries: List[PolicyEntry] = []
+        placed_any = False
+        for cand in cl:
+            if mrl.is_empty():
+                break
+            t = cand.tensor
+            if mrl.covered_count(t.birth, t.death) == 0:
+                continue
+            e = self.place_swap_in(cand)
+            if e is None:
+                continue
+            # §5.4.1: decrement tensor size from MREs across its lifecycle
+            mrl.decrement(t.birth, e.swap_in_op, t.nbytes)
+            entries.append(e)
+            placed_any = True
+        if not placed_any and cl and not mrl.is_empty():
+            # nobody fits without stalls: paper picks the top-score candidate
+            cand = cl[0]
+            e = self.place_stalled(cand)
+            mrl.decrement(cand.tensor.birth, e.swap_in_op, cand.tensor.nbytes)
+            entries.append(e)
+        return entries
+
+    # ------------------------------------------------ §5.4.2 swap-out
+    def set_free_time(self, entries: List[PolicyEntry]) -> None:
+        for e in sorted(entries, key=lambda e: e.birth):
+            ts = self.t_swap(e.nbytes)
+            li = self.layer_of(e.birth)
+            done = None
+            for lj in range(li, len(self.layers)):
+                lay = self.layers[lj]
+                if lay.remaining_time > ts:
+                    lay.remaining_time -= ts
+                    done = lay
+                    break
+            if done is None:      # saturated: completes at end of fwd stream
+                done = self.layers[self.layer_of(self.peak_op)]
+            e.swap_out_done_op = done.end_op
+
+    # --------------------------------------------------------- reporting
+    def reuse_intervals(self, entries: List[PolicyEntry]) -> np.ndarray:
+        """Ops between swap-out dispatch and memory release — the custom
+        recordStream releases at swap_out_done_op (simulator-known), the
+        naive recordStream analogue holds until first backward use."""
+        return np.asarray([max(e.swap_out_done_op - e.birth, 0)
+                           for e in entries], np.int64)
+
+    def naive_reuse_intervals(self, entries: List[PolicyEntry]) -> np.ndarray:
+        return np.asarray([max(e.death - e.birth, 0) for e in entries],
+                          np.int64)

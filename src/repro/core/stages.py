@@ -1,0 +1,66 @@
+"""Stage-adjusting module (paper Algo. 1).
+
+WarmUp --(m stable steps)--> GenPolicy --(n steps)--> Stable; any significant
+operator-sequence change (length diff >= 5% OR cosine < 95%) resets to
+WarmUp.  During GenPolicy the profiler runs in Detailed mode and a fresh
+policy is generated each step; the best-performing of the n policies becomes
+the long-term policy (§7.1).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.common.config import ChameleonConfig
+from repro.core.tokenizer import similarity
+
+
+class Stage(enum.Enum):
+    WARMUP = "WarmUp"
+    GENPOLICY = "GenPolicy"
+    STABLE = "Stable"
+
+
+@dataclass
+class StageMachine:
+    cfg: ChameleonConfig
+    stage: Stage = Stage.WARMUP
+    stable_step: int = 0
+    prev_seq: Optional[np.ndarray] = None
+    transitions: list = field(default_factory=list)
+
+    def observe(self, op_seq: np.ndarray, step: int = -1) -> Stage:
+        """Algo 1: feed one iteration's operator sequence."""
+        if self.prev_seq is None:
+            self.prev_seq = op_seq
+            self._log(step, "init", Stage.WARMUP)
+            return self.stage
+
+        len_diff, cos = similarity(op_seq, self.prev_seq)
+        stable = (len_diff < self.cfg.len_change_threshold
+                  and cos > self.cfg.cos_sim_threshold)
+        prev_stage = self.stage
+        if stable:
+            self.stable_step += 1
+            if prev_stage is Stage.WARMUP and self.stable_step > self.cfg.m_warmup_stable:
+                self.stage, self.stable_step = Stage.GENPOLICY, 0
+            elif (prev_stage is Stage.GENPOLICY
+                  and self.stable_step > self.cfg.n_genpolicy_steps):
+                self.stage = Stage.STABLE
+        else:
+            self.stage, self.stable_step = Stage.WARMUP, 0
+        if self.stage is not prev_stage:
+            self._log(step, "stable" if stable else "seq-change", self.stage)
+        self.prev_seq = op_seq
+        return self.stage
+
+    @property
+    def mode(self) -> str:
+        """Profiler mode implied by the stage (§4)."""
+        return "detailed" if self.stage is Stage.GENPOLICY else "lightweight"
+
+    def _log(self, step, why, to):
+        self.transitions.append((step, why, to.value))

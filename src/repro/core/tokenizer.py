@@ -1,0 +1,114 @@
+"""Operator-sequence tokenization (§4, Lightweight mode).
+
+The paper assigns an integer to each operator name and represents the
+iteration's operator sequence as an integer tensor; change detection then
+reduces to a length check plus a cosine similarity — no strings at runtime.
+
+Here an "operator" is a jaxpr equation (with scans virtually unrolled so the
+token stream matches the physical device op stream), and the per-iteration
+sequence is the concatenation of every jitted function the training loop
+dispatched that iteration (fwd/bwd, optimizer, optional eval, ...) — the JAX
+analogue of the eager dispatch stream.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+# primitives whose sub-jaxpr we expand inline
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+
+class OpVocab:
+    """Operator-name -> integer token (grown on demand)."""
+
+    def __init__(self):
+        self._ids: Dict[str, int] = {}
+
+    def id(self, name: str) -> int:
+        tok = self._ids.get(name)
+        if tok is None:
+            tok = len(self._ids) + 1  # 0 reserved
+            self._ids[name] = tok
+        return tok
+
+    def __len__(self):
+        return len(self._ids)
+
+
+GLOBAL_VOCAB = OpVocab()
+
+
+def _sub_jaxprs(eqn):
+    out = []
+    for k in _SUBJAXPR_PARAMS:
+        if k in eqn.params:
+            v = eqn.params[k]
+            if v is not None:
+                out.append(v)
+    if "branches" in eqn.params:          # cond: take first branch (documented)
+        out.append(eqn.params["branches"][0])
+    if "cond_jaxpr" in eqn.params:        # while
+        out.append(eqn.params["body_jaxpr"])
+    return out
+
+
+def _unwrap(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def tokenize_jaxpr(jaxpr, vocab: OpVocab = GLOBAL_VOCAB,
+                   max_ops: int = 2_000_000) -> np.ndarray:
+    """Flatten a (closed) jaxpr into an int32 token stream, unrolling scans."""
+    toks: List[int] = []
+
+    def walk(j, mult: int):
+        j = _unwrap(j)
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if name == "scan":
+                length = eqn.params.get("length", 1)
+                body = eqn.params["jaxpr"]
+                walk(body, mult * length)
+                continue
+            subs = _sub_jaxprs(eqn)
+            if subs:
+                for s in subs:
+                    walk(s, mult)
+                continue
+            tok = vocab.id(name)
+            toks.extend([tok] * mult if mult <= 64 else [tok] * 64)
+            if len(toks) > max_ops:
+                raise RuntimeError("op stream too long")
+
+    walk(jaxpr, 1)
+    return np.asarray(toks, np.int32)
+
+
+def sequence_signature(token_streams: Iterable[np.ndarray]) -> np.ndarray:
+    """Concatenate the per-dispatch token streams of one iteration."""
+    streams = [s for s in token_streams if s.size]
+    if not streams:
+        return np.zeros((0,), np.int32)
+    return np.concatenate(streams)
+
+
+def similarity(a: np.ndarray, b: np.ndarray) -> Tuple[float, float]:
+    """(relative length difference, cosine similarity).
+
+    Cosine is computed on the operator-count histogram, which is the
+    length-robust form of the paper's tensor cosine (identical when
+    lengths match and ops only reorder/extend)."""
+    la, lb = len(a), len(b)
+    if la == 0 and lb == 0:
+        return 0.0, 1.0
+    if la == 0 or lb == 0:
+        return 1.0, 0.0
+    len_diff = abs(la - lb) / max(la, lb)
+    n = int(max(a.max(initial=0), b.max(initial=0))) + 1
+    ha = np.bincount(a, minlength=n).astype(np.float64)
+    hb = np.bincount(b, minlength=n).astype(np.float64)
+    denom = np.linalg.norm(ha) * np.linalg.norm(hb)
+    cos = float(ha @ hb / denom) if denom else 0.0
+    return len_diff, cos

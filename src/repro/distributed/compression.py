@@ -1,0 +1,76 @@
+"""Cross-pod gradient compression with error feedback (beyond-paper).
+
+The pod axis is the slow (DCI) link at multi-pod scale.  Instead of an f32/
+bf16 all-reduce across pods, each pod quantizes its local gradient partial
+to int8 (+ per-row f32 scales), all-gathers the *int8* payload across the
+pod axis (wire bytes ÷ 2–4), and reduces locally after dequantization.
+Error feedback accumulates the quantization residual into the next step so
+the compression bias telescopes away (EF-SGD).
+
+Implemented with ``jax.shard_map`` over the pod axis so the all-gather
+really carries int8 on the wire — visible in the dry-run HLO as
+``all-gather`` ops with s8 operands (the roofline's collective term drops
+accordingly).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _quant_rows(x2d):
+    amax = jnp.max(jnp.abs(x2d), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x2d / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _compressed_allreduce_leaf(g, axis: str):
+    shape = g.shape
+    F = shape[-1] if g.ndim > 1 else g.size
+    x2d = g.reshape(-1, F).astype(jnp.float32)
+    q, s = _quant_rows(x2d)
+    qg = jax.lax.all_gather(q, axis)          # (pods, R, F) int8 on the wire
+    sg = jax.lax.all_gather(s, axis)          # (pods, R, 1) f32 (tiny)
+    summed = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    return summed.reshape(shape).astype(g.dtype)
+
+
+def compressed_psum_tree(grads, axis: str):
+    return jax.tree.map(lambda g: _compressed_allreduce_leaf(g, axis), grads)
+
+
+def make_compressed_grad_sync(mesh: Mesh, axis: str = "pod"):
+    """Returns sync(grads_local, err) -> (grads_synced, new_err).
+
+    Call inside a shard_map'ed step whose grads are per-pod partials; the
+    error-feedback state `err` has the same structure as grads."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis!r}")
+
+    def sync(grads, err):
+        def leaf(g, e):
+            corrected = g.astype(jnp.float32) + e
+            shape = corrected.shape
+            F = shape[-1] if corrected.ndim > 1 else corrected.size
+            x2d = corrected.reshape(-1, F)
+            q, s = _quant_rows(x2d)
+            new_e = (x2d - q.astype(jnp.float32) * s).reshape(shape)
+            qg = jax.lax.all_gather(q, axis)
+            sg = jax.lax.all_gather(s, axis)
+            summed = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+            n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+            return (summed / n).reshape(shape).astype(g.dtype), new_e
+
+        pairs = jax.tree.map(leaf, grads, err)
+        synced = jax.tree.map(lambda t: t[0], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda t: t[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return synced, new_err
+
+    return sync

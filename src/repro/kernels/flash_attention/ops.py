@@ -1,0 +1,102 @@
+"""Jit'd public wrappers for the flash attention kernel.
+
+Layout adapters: the model zoo uses (B, S, H, D); the kernel wants
+(B, H, S, D).  Sequences are padded to block multiples; padded keys are
+masked in-kernel via the per-batch ``kv_lens`` scalar.  The backward pass is
+a custom_vjp that recomputes attention with the memory-efficient jnp
+formulation (flash semantics: nothing quadratic is saved).  ``interpret``
+defaults to True off-TPU so CPU tests execute the kernel body.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, lens, causal, sm_scale, block_q, block_k):
+    return K.flash_attention_fwd(q, k, v, causal=causal, sm_scale=sm_scale,
+                                 block_q=block_q, block_k=block_k,
+                                 kv_lens=lens,
+                                 interpret=_default_interpret())
+
+
+def _ref_attention(q, k, v, lens, causal, sm_scale):
+    from repro.kernels.flash_attention.ref import attention_ref
+    return attention_ref(q, k, v, causal=causal, sm_scale=sm_scale, lens=lens)
+
+
+def _flash_fwd(q, k, v, lens, causal, sm_scale, block_q, block_k):
+    out = _flash(q, k, v, lens, causal, sm_scale, block_q, block_k)
+    return out, (q, k, v, lens)
+
+
+def _flash_bwd(causal, sm_scale, block_q, block_k, res, g):
+    q, k, v, lens = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref_attention(q, k, v, lens, causal, sm_scale),
+        q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    """Model-layout entry point.  q (B,Sq,H,D); k/v (B,Sk,Kh,D)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    qt, sq0 = _pad_to(qt, 2, block_q)
+    kt, sk0 = _pad_to(kt, 2, block_k)
+    vt, _ = _pad_to(vt, 2, block_k)
+    lens = jnp.full((B,), sk0, jnp.int32)
+    out = _flash(qt, kt, vt, lens, causal, sm_scale,
+                 min(block_q, qt.shape[2]), min(block_k, kt.shape[2]))
+    out = out[:, :, :sq0, :]
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_decode(q, k, v, lens, *, sm_scale: Optional[float] = None,
+                 block_k: int = 128):
+    """Decode entry point.  q (B,1,H,D); k/v (B,Smax,Kh,D); lens (B,)."""
+    B, _, H, D = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    kt, sk0 = _pad_to(kt, 2, block_k)
+    vt, _ = _pad_to(vt, 2, block_k)
+    lens = jnp.minimum(lens.astype(jnp.int32), sk0)
+    out = K.flash_decode_fwd(qt, kt, vt, lens, sm_scale=sm_scale,
+                             block_k=min(block_k, kt.shape[2]),
+                             interpret=_default_interpret())
+    return jnp.swapaxes(out, 1, 2)

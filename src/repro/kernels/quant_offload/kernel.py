@@ -1,0 +1,63 @@
+"""Row-wise symmetric int8 quantize / dequantize — Pallas TPU kernels.
+
+Beyond-paper compressed-swap mode (CSWAP-inspired): activations selected for
+host offload cross the host link at 1/2 (bf16) or 1/4 (f32) width.  Rows are
+the flattened leading dims; the scale is absmax/127 per row.  VPU-only
+kernels (no MXU); block rows × full feature width tiles in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (br, F)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)  # (br, 1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, out_dtype):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = (q * s_ref[...]).astype(out_dtype)
+
+
+def quantize_fwd(x2d, *, block_rows: int = 256, interpret: bool = False):
+    """x2d (R, F) -> (int8 (R, F), scales (R, 1))."""
+    R, F = x2d.shape
+    br = min(block_rows, R)
+    assert R % br == 0, (R, br)
+    grid = (R // br,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, F), lambda r: (r, 0))],
+        out_specs=[pl.BlockSpec((br, F), lambda r: (r, 0)),
+                   pl.BlockSpec((br, 1), lambda r: (r, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, F), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+
+
+def dequantize_fwd(q2d, scales, out_dtype, *, block_rows: int = 256,
+                   interpret: bool = False):
+    R, F = q2d.shape
+    br = min(block_rows, R)
+    assert R % br == 0
+    kernel = functools.partial(_dequant_kernel, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, F), lambda r: (r, 0)),
+                  pl.BlockSpec((br, 1), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((br, F), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, F), out_dtype),
+        interpret=interpret,
+    )(q2d, scales)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the quantize/dequantize kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x2d):
+    xf = x2d.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_ref(q2d, scales, out_dtype):
+    return (q2d.astype(jnp.float32) * scales).astype(out_dtype)

@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the SSD scan kernel (model layout adapters + padding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as K
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256):
+    """Model layout: x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,N)."""
+    B, S, H, P = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    xt = jnp.transpose(x, (0, 2, 1, 3))          # (B,H,S,P)
+    dtt = jnp.transpose(dt, (0, 2, 1))           # (B,H,S)
+    y = K.ssd_scan_fwd(xt, dtt, A, Bm, Cm, chunk=min(chunk, xt.shape[2]),
+                       interpret=_default_interpret())
+    y = jnp.transpose(y, (0, 2, 1, 3))[:, :S]
+    return y

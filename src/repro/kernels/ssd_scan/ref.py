@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the SSD scan kernel: the sequential recurrence
+   S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_tᵀ ;  y_t = C_t · S_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """x (B,H,S,P); dt (B,H,S); A (H,); Bm/Cm (B,S,N) -> y (B,H,S,P)."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    def step(state, t):
+        dA = jnp.exp(dtf[:, :, t] * A[None, :])            # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xf[:, :, t] * dtf[:, :, t, None],
+                         Bf[:, t])
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Cf[:, t])
+        return state, y
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, init, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)          # (B,H,S,P)

@@ -1,0 +1,44 @@
+"""Serving entry point: batched decode over the slot server.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    import repro.configs as C
+    from repro.models.registry import get_api
+    from repro.runtime.server import Server
+
+    cfg = C.get_reduced(args.arch) if args.reduced else C.get_config(args.arch)
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.PRNGKey(0))
+    srv = Server(cfg, params, max_batch=args.max_batch, max_len=args.max_len)
+    rng = np.random.RandomState(0)
+    for _ in range(args.requests):
+        srv.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)),
+                   max_new_tokens=args.new_tokens)
+    t0 = time.time()
+    results = srv.run_until_done(max_ticks=10_000)
+    dt = time.time() - t0
+    toks = sum(len(v) for v in results.values())
+    print(f"{len(results)} requests, {toks} tokens, {dt:.2f}s, "
+          f"{toks / dt:.1f} tok/s, {srv.ticks} ticks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every (arch × shape)
+cell: weak-type-correct, shardable, zero device allocation.
+
+For ``train`` cells the spec covers the full train-step signature
+(params, opt_state, batch, loss_scale); ``prefill`` covers (params, batch);
+``decode`` covers (params, tokens, decode_state with a seq_len KV cache).
+Modality frontends are stubs: ``memory`` is the precomputed frame/patch
+embedding tensor.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.data.synthetic import make_batch_specs
+from repro.distributed import sharding as shd
+from repro.distributed import steps as S
+from repro.models.registry import get_api
+
+
+def train_input_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    params_sds, opt_sds = S.abstract_train_state(cfg)
+    return {"params": params_sds, "opt_state": opt_sds,
+            "loss_scale": jax.ShapeDtypeStruct((), jnp.float32)}
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig):
+    api = get_api(cfg)
+    B = shape.global_batch
+    max_len = shape.seq_len
+    params_sds = S.abstract_params(cfg)
+    mem = _memory_spec(cfg, B)
+
+    def build(params, memory):
+        return api.init_decode_state(cfg, B, max_len, memory=memory,
+                                     params=params)
+
+    if mem is not None:
+        return jax.eval_shape(build, params_sds, mem)
+    return jax.eval_shape(lambda p: build(p, None), params_sds)
+
+
+def _memory_spec(cfg: ModelConfig, B: int):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((B, cfg.image_tokens, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        return jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[tuple, dict]:
+    """Returns (args_specs, meta) for the cell's step function."""
+    if shape.kind == "train":
+        base = train_input_specs(cfg)
+        batch = make_batch_specs(cfg, shape)
+        args = (base["params"], base["opt_state"], batch, base["loss_scale"])
+        return args, {"step": "train"}
+    if shape.kind == "prefill":
+        params_sds = S.abstract_params(cfg)
+        batch = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        mem = _memory_spec(cfg, shape.global_batch)
+        if mem is not None:
+            batch["memory"] = mem
+        return (params_sds, batch), {"step": "prefill"}
+    # decode: one new token against a seq_len KV cache
+    params_sds = S.abstract_params(cfg)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    state = decode_state_specs(cfg, shape)
+    return (params_sds, tokens, state), {"step": "decode"}
+
+
+# ------------------------------------------------------------- shardings
+def _batch_axes(mesh: Mesh, batch: int):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # replicate tiny batches (e.g. long_500k batch=1) instead of 1/16 shards
+    import numpy as np
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return axes if batch >= size else ()
+
+
+def train_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    zero_stage: int = 2):
+    axes = S.param_axes(cfg)
+    params_sds, opt_sds = S.abstract_train_state(cfg)
+    p_spec = S.param_specs(axes, mesh, zero3=(zero_stage >= 3),
+                           sds_tree=params_sds)
+    o_spec = S.opt_specs(axes, mesh, zero_stage, opt_sds=opt_sds)
+    b_axes = _batch_axes(mesh, shape.global_batch)
+
+    def batch_spec(x):
+        spec = [None] * len(x.shape)
+        if spec:
+            spec[0] = b_axes if b_axes else None
+        return P(*spec)
+
+    batch = make_batch_specs(cfg, shape)
+    b_spec = jax.tree.map(batch_spec, batch)
+    ls_spec = P()
+    in_specs = (p_spec, o_spec, b_spec, ls_spec)
+    out_specs = (p_spec, o_spec, P())  # params, opt, metrics(replicated)
+    to = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return to(in_specs), to(out_specs)
+
+
+def decode_state_spec_tree(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                           state_sds):
+    """PartitionSpecs for the decode state: KV cache sharded batch->data and
+    kv_seq->model (decode-time sequence parallelism); SSM state on heads."""
+    b_axes = _batch_axes(mesh, shape.global_batch)
+
+    def one(path_name, sds):
+        nd = len(sds.shape)
+        if path_name in ("attn_k", "attn_v"):
+            spec = [None] * nd
+            spec[1] = b_axes or None          # (L, B, S, Kh, D)
+            spec[2] = "model"
+            return P(*spec)
+        if path_name in ("cross_k", "cross_v"):
+            spec = [None] * nd
+            spec[1] = b_axes or None
+            return P(*spec)
+        if path_name in ("ssm_conv",):
+            spec = [None] * nd
+            spec[1] = b_axes or None
+            spec[-1] = "model"                # channels
+            return P(*spec)
+        if path_name in ("ssm_ssd",):
+            spec = [None] * nd
+            spec[1] = b_axes or None
+            spec[2] = "model"                 # heads
+            return P(*spec)
+        if path_name == "pos":
+            return P()
+        return P(*([None] * nd))
+
+    fields = type(state_sds)._fields
+    return type(state_sds)(*[
+        None if getattr(state_sds, f) is None else jax.tree.map(
+            lambda s, f=f: one(f, s), getattr(state_sds, f))
+        for f in fields])
+
+
+def serve_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    state_sds=None):
+    axes = S.param_axes(cfg)
+    p_spec = S.param_specs(axes, mesh, sds_tree=S.abstract_params(cfg))
+    b_axes = _batch_axes(mesh, shape.global_batch)
+    to = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    if shape.kind == "prefill":
+        def batch_spec(x):
+            spec = [None] * len(x.shape)
+            spec[0] = b_axes or None
+            return P(*spec)
+        batch = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        mem = _memory_spec(cfg, shape.global_batch)
+        if mem is not None:
+            batch["memory"] = mem
+        in_specs = (p_spec, jax.tree.map(batch_spec, batch))
+        out_specs = batch_spec(jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len, cfg.vocab_size), jnp.float32))
+        return to(in_specs), to(out_specs)
+    # decode
+    assert state_sds is not None
+    tok_spec = P(b_axes or None, None)
+    st_spec = decode_state_spec_tree(cfg, shape, mesh, state_sds)
+    st_spec = type(state_sds)(*[
+        None if getattr(state_sds, f) is None else S.sanitize_specs(
+            getattr(st_spec, f), getattr(state_sds, f), mesh)
+        for f in type(state_sds)._fields])
+    logits_spec = P(b_axes or None, None, None)
+    in_specs = (p_spec, tok_spec, st_spec)
+    out_specs = (logits_spec, st_spec)
+    return to(in_specs), to(out_specs)

@@ -1,0 +1,75 @@
+"""Production training entry point.
+
+Single-host CPU (reduced configs) or multi-host TPU (full configs):
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --reduced --steps 50
+
+On a real cluster each host runs this under the pod launcher (see
+launch/scripts/) with JAX_COORDINATOR_ADDRESS etc. set; jax.distributed
+initializes from env and the per-host data shards come from
+process_index/process_count.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-paper")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-sized config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--budget-gib", type=float, default=16.0)
+    ap.add_argument("--no-chameleon", action="store_true")
+    ap.add_argument("--multihost", action="store_true",
+                    help="initialize jax.distributed from env")
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.multihost:
+        import jax
+        jax.distributed.initialize()
+
+    import jax
+    import repro.configs as C
+    from repro.common.config import ChameleonConfig, TrainConfig
+    from repro.data.synthetic import SyntheticTokens
+    from repro.launch.mesh import make_production_mesh
+    from repro.runtime.trainer import Trainer
+
+    cfg = C.get_reduced(args.arch) if args.reduced else C.get_config(args.arch)
+    seq = args.seq or (128 if args.reduced else 4096)
+    gb = args.global_batch or (8 if args.reduced else 256)
+    tcfg = TrainConfig(steps=args.steps, checkpoint_dir=args.ckpt_dir,
+                       checkpoint_every=max(args.steps // 4, 1),
+                       eval_every=max(args.steps // 3, 1))
+    cham = ChameleonConfig(enabled=not args.no_chameleon,
+                           hbm_budget_bytes=int(args.budget_gib * 2 ** 30))
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    data = SyntheticTokens(cfg.vocab_size, seq, gb,
+                           host_index=jax.process_index(),
+                           host_count=jax.process_count()).start()
+    try:
+        tr = Trainer(cfg, tcfg, cham, mesh=mesh, data=data)
+        if args.resume:
+            tr.resume()
+        rep = tr.train(args.steps)
+        print(f"done: loss {rep.losses[0]:.3f} -> {rep.losses[-1]:.3f}; "
+              f"stages={set(rep.stages)}; "
+              f"chameleon={tr.rt.stats()['applied'][:60]}")
+    finally:
+        data.stop()
+
+
+if __name__ == "__main__":
+    main()

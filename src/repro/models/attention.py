@@ -1,0 +1,236 @@
+"""GQA attention: dense / chunked(online-softmax) / Pallas-flash impls,
+plus the decode path over an explicit KV cache.
+
+``chunked`` is the memory-safe pure-jnp default (lax.scan over KV blocks with
+running (m, l) statistics — the same algorithm the Pallas kernel implements
+natively on TPU); ``pallas`` routes to ``repro.kernels.flash_attention``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.core.sites import tag
+from repro.distributed import sharding as shd
+from repro.models.layers import apply_rope, dense_init, rope_frequencies
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    p = {"wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, cfg),
+         "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, cfg),
+         "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, cfg),
+         "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, cfg)}
+    a = {"wq": ("embed", "q_dim"), "wk": ("embed", "kv_dim"),
+         "wv": ("embed", "kv_dim"), "wo": ("q_dim", "embed")}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), p["wq"].dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), p["wk"].dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), p["wv"].dtype)
+        a["bq"], a["bk"], a["bv"] = ("q_dim",), ("kv_dim",), ("kv_dim",)
+    return p, a
+
+
+def _project_q(cfg, p, x):
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    B, S = q.shape[:2]
+    return q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+
+
+def _project_kv(cfg, p, x):
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"])
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    B, S = k.shape[:2]
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# ------------------------------------------------------------------ core
+def dense_attention(cfg: ModelConfig, q, k, v, *, causal: bool,
+                    q_offset: int = 0, kv_len: Optional[jnp.ndarray] = None):
+    """Reference O(S^2)-memory attention. q (B,Sq,H,D), k/v (B,Sk,Kh,D)."""
+    B, Sq, H, D = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qf = q.reshape(B, Sq, Kh, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bckd->bkgqc", qf, k.astype(jnp.float32))
+    scores *= 1.0 / math.sqrt(D)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        scores = jnp.where(qpos >= kpos, scores, NEG_INF)
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, :] < kv_len[:, None]  # (B, Sk)
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqc,bckd->bqkgd", w, v.astype(jnp.float32))
+    return ctx.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+@functools.partial(jax.checkpoint, static_argnums=(0, 3, 4))
+def _chunked_attention_inner(cfg: ModelConfig, *args, **kw):
+    """Remat boundary: flash semantics — no per-chunk probabilities are ever
+    saved for backward (recomputed from q/k/v, exactly what the Pallas TPU
+    kernel does natively)."""
+    return _chunked_attention_raw(cfg, *args, **kw)
+
+
+def chunked_attention(cfg: ModelConfig, q, k, v, *, causal: bool,
+                      q_offset: int = 0, kv_len: Optional[jnp.ndarray] = None):
+    if kv_len is None:
+        return _chunked_attention_inner(cfg, q, k, v, causal, q_offset)
+    return _chunked_attention_raw(cfg, q, k, v, causal, q_offset, kv_len)
+
+
+def _chunked_attention_raw(cfg: ModelConfig, q, k, v, causal: bool,
+                           q_offset: int = 0,
+                           kv_len: Optional[jnp.ndarray] = None):
+    """Online-softmax attention scanning KV chunks: O(Sq·chunk) memory."""
+    B, Sq, H, D = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    C = min(cfg.attn_chunk, Sk)
+    if Sk % C:  # pad KV to a chunk multiple with masked tail
+        pad = C - Sk % C
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        base_len = jnp.full((B,), Sk, jnp.int32)
+        kv_len = base_len if kv_len is None else jnp.minimum(kv_len, base_len)
+        Sk = Sk + pad
+    n_chunks = Sk // C
+    qf = q.reshape(B, Sq, Kh, G, D).astype(jnp.float32) / math.sqrt(D)
+    kc = k.reshape(B, n_chunks, C, Kh, D)
+    vc = v.reshape(B, n_chunks, C, Kh, D)
+    qpos = jnp.arange(Sq) + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp
+        kpos = idx * C + jnp.arange(C)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kb.astype(jnp.float32))
+        if causal:
+            s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+        if kv_len is not None:
+            valid = kpos[None, :] < kv_len[:, None]
+            s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Kh, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kh, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Kh, G, Sq, D), jnp.float32)
+    xs = (jnp.arange(n_chunks),
+          jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+    ctx = acc / jnp.maximum(l, 1e-30)[..., None]
+    ctx = jnp.moveaxis(ctx, 3, 1)  # (B, Sq, Kh, G, D)
+    return ctx.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _attend(cfg: ModelConfig, q, k, v, *, causal: bool, q_offset: int = 0,
+            kv_len=None):
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        if kv_len is None and q.shape[1] > 1:
+            return fa_ops.flash_attention(q, k, v, causal=causal)
+    if cfg.attn_impl == "dense" and kv_len is None:
+        return dense_attention(cfg, q, k, v, causal=causal, q_offset=q_offset)
+    return chunked_attention(cfg, q, k, v, causal=causal, q_offset=q_offset,
+                             kv_len=kv_len)
+
+
+# -------------------------------------------------------------- fwd paths
+def self_attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True):
+    """Full-sequence self-attention (train / prefill). x (B,S,d)."""
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    if cfg.pos_embedding == "rope":
+        cos, sin = rope_frequencies(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = tag(q, "qkv_proj")
+    k = tag(k, "qkv_proj")
+    v = tag(v, "qkv_proj")
+    q = shd.constrain(q, ("batch", "seq", "act_heads", None))
+    ctx = _attend(cfg, q, k, v, causal=causal)
+    ctx = tag(ctx, "attn_ctx")
+    return _out_proj(cfg, p, ctx)
+
+
+def _out_proj(cfg, p, ctx):
+    B, S = ctx.shape[:2]
+    out = jnp.einsum("bsq,qd->bsd", ctx.reshape(B, S, cfg.q_dim), p["wo"])
+    out = shd.constrain(out, ("batch", "seq", "act_embed"))
+    return tag(out, "attn_out")
+
+
+def cross_attention(cfg: ModelConfig, p, x, kv_cache: Tuple[jnp.ndarray, jnp.ndarray]):
+    """Cross-attention against precomputed encoder/image KV. x (B,S,d)."""
+    q = _project_q(cfg, p, x)
+    q = tag(q, "qkv_proj")
+    k, v = kv_cache
+    ctx = _attend(cfg, q, k, v, causal=False)
+    ctx = tag(ctx, "cross_ctx")
+    return _out_proj(cfg, p, ctx)
+
+
+def project_cross_kv(cfg: ModelConfig, p, memory):
+    """Precompute cross-attn K/V from encoder output / image embeds."""
+    k, v = _project_kv(cfg, p, memory)
+    return tag(k, "cross_kv"), tag(v, "cross_kv")
+
+
+# ------------------------------------------------------------ decode path
+class KVCache(NamedTuple):
+    k: jnp.ndarray      # (B, Smax, Kh, D)
+    v: jnp.ndarray      # (B, Smax, Kh, D)
+    length: jnp.ndarray  # (B,) int32 — tokens already in cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+                  layers: Optional[int] = None) -> KVCache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = layers if layers is not None else cfg.num_layers
+    shape = (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def decode_self_attention(cfg: ModelConfig, p, x, layer_cache, positions):
+    """One-token decode. x (B,1,d); layer_cache (k,v) (B,Smax,Kh,D);
+    positions (B,) current index. Returns (out, (k,v) updated)."""
+    ck, cv = layer_cache
+    q = _project_q(cfg, p, x)
+    k_new, v_new = _project_kv(cfg, p, x)
+    if cfg.pos_embedding == "rope":
+        cos, sin = rope_frequencies(cfg, positions[:, None])
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    B = x.shape[0]
+    # write the new kv at position[b] per batch row
+    oh = jax.nn.one_hot(positions, ck.shape[1], dtype=ck.dtype)  # (B, Smax)
+    ck = ck * (1.0 - oh)[..., None, None] + oh[..., None, None] * k_new.astype(ck.dtype)
+    cv = cv * (1.0 - oh)[..., None, None] + oh[..., None, None] * v_new.astype(cv.dtype)
+    ck = shd.constrain(ck, ("batch", "kv_seq", "act_kv_heads", None))
+    cv = shd.constrain(cv, ("batch", "kv_seq", "act_kv_heads", None))
+    ctx = _attend(cfg, q, ck, cv, causal=False, kv_len=positions + 1)
+    ctx = tag(ctx, "attn_ctx")
+    return _out_proj(cfg, p, ctx), (ck, cv)

@@ -1,0 +1,154 @@
+"""Shared building blocks: init, norms, RoPE, MLP, embeddings.
+
+Parameters are plain nested dicts of jnp arrays.  Each ``init_*`` returns
+``(params, axes)`` where ``axes`` mirrors the params pytree with tuples of
+*logical* axis names consumed by ``distributed.sharding``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.core.sites import tag
+from repro.distributed import sharding as shd
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, cfg: ModelConfig, scale: float = 1.0):
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * std).astype(_dtype(cfg))
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), _dtype(cfg))}, {"scale": ("embed",)}
+    return ({"scale": jnp.ones((d,), _dtype(cfg)),
+             "bias": jnp.zeros((d,), _dtype(cfg))},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_frequencies(cfg: ModelConfig, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., S) -> cos/sin of shape (..., S, head_dim/2), f32."""
+    half = cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2). Rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.glu:
+        p = {"wi_gate": dense_init(ks[0], cfg.d_model, d_ff, cfg),
+             "wi_up": dense_init(ks[1], cfg.d_model, d_ff, cfg),
+             "wo": dense_init(ks[2], d_ff, cfg.d_model, cfg)}
+        a = {"wi_gate": ("embed", "mlp"), "wi_up": ("embed", "mlp"),
+             "wo": ("mlp", "embed")}
+    else:
+        p = {"wi_up": dense_init(ks[1], cfg.d_model, d_ff, cfg),
+             "wo": dense_init(ks[2], d_ff, cfg.d_model, cfg)}
+        a = {"wi_up": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return p, a
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x)
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    """x (B, S, d) -> (B, S, d)."""
+    up = tag(jnp.einsum("bsd,df->bsf", x, p["wi_up"]), "ffn_pre")
+    if cfg.glu:
+        gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+        h = tag(gate, "ffn_pre")
+        h = _act(cfg, h) * up
+    else:
+        h = _act(cfg, up)
+    h = shd.constrain(h, ("batch", "seq", "act_mlp"))
+    h = tag(h, "ffn_act")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    out = shd.constrain(out, ("batch", "seq", "act_embed"))
+    return tag(out, "ffn_out")
+
+
+# ------------------------------------------------------------- embedding
+def init_embedding(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02
+                 ).astype(_dtype(cfg))}
+    a = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, cfg)
+        a["unembed"] = ("embed", "vocab")
+    if cfg.pos_embedding == "learned":
+        p["pos"] = (jax.random.normal(ks[2], (cfg.max_position, cfg.d_model)) * 0.02
+                    ).astype(_dtype(cfg))
+        a["pos"] = ("pos", "embed")
+    return p, a
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens, positions=None):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.pos_embedding == "learned":
+        assert positions is not None
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(x.dtype)
+    x = shd.constrain(x, ("batch", "seq", "act_embed"))
+    return tag(x, "embed_out")
+
+
+def unembed(cfg: ModelConfig, p, x):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = shd.constrain(logits, ("batch", "seq", "act_vocab"))
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Stable softmax-xent; logits (B,S,V) possibly vocab-sharded."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,24 @@
+"""Family dispatch: one uniform API over the model zoo."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.common.config import ModelConfig
+from repro.models import transformer, whisper
+
+
+class ModelApi(NamedTuple):
+    init: Callable          # (cfg, key) -> (params, axes)
+    forward: Callable       # (cfg, params, tokens, **kw) -> (logits, aux)
+    loss_fn: Callable       # (cfg, params, batch, *, policy) -> (loss, metrics)
+    decode_step: Callable   # (cfg, params, tokens, state) -> (logits, state)
+    init_decode_state: Callable
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "encdec":
+        return ModelApi(whisper.init_model, whisper.forward, whisper.loss_fn,
+                        whisper.decode_step, whisper.init_decode_state)
+    return ModelApi(transformer.init_model, transformer.forward,
+                    transformer.loss_fn, transformer.decode_step,
+                    transformer.init_decode_state)

@@ -1,0 +1,202 @@
+"""Mamba-2 (SSD — state-space duality) block, pure-JAX chunked formulation.
+
+The chunked algorithm (arXiv:2405.21060 §6): within a chunk the output is a
+masked quadratic form (maps to the MXU); across chunks a low-rank state
+(B, H, P, N) is carried through a sequential ``lax.scan`` — the same
+structure the Pallas ``ssd_scan`` kernel implements with the grid's
+sequential dimension carrying state in VMEM scratch.
+
+Decode is the O(1) recurrence over the persistent (conv, ssd) state.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.core.sites import tag
+from repro.distributed import sharding as shd
+from repro.models.layers import apply_norm, dense_init
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d, di, ds = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    # fused in-projection: [z (di), x (di), B (ds), C (ds), dt (nh)]
+    proj_out = 2 * di + 2 * ds + nh
+    p = {
+        "in_proj": dense_init(ks[0], d, proj_out, cfg),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, di + 2 * ds))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di + 2 * ds,), dt),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], di, d, cfg),
+    }
+    a = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm_scale": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return p, a
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di: 2 * di + 2 * ds]
+    dt = proj[..., 2 * di + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: ModelConfig, p, xbc):
+    """Depthwise causal conv over (B, S, C_channels)."""
+    W = cfg.ssm_conv_width
+    pads = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pads[:, i: i + xbc.shape[1], :] * p["conv_w"][i][None, None, :]
+              for i in range(W))
+    return jax.nn.silu(out + p["conv_b"][None, None, :].astype(out.dtype))
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan. x (B,S,H,P), dt (B,S,H) [post-softplus], A (H,) negative,
+    Bm/Cm (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    cl = min(chunk, S)
+    if S % cl:
+        pad = cl - S % cl
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // cl
+
+    xc = x.reshape(B, nc, cl, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, nc, cl, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B, nc, cl, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(B, nc, cl, N).transpose(1, 0, 2, 3)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    @jax.checkpoint
+    def step(state, inp):
+        # Remat boundary: intra-chunk (cl x cl) matrices are recomputed in
+        # the backward (the SSD kernel does the same on TPU); the carried
+        # chunk states are tagged so the swap policy can offload them —
+        # they are the dominant residual of SSM training.
+        xb, dtb, Bb, Cb = inp          # (B,cl,H,P) (B,cl,H) (B,cl,N) (B,cl,N)
+        dA = dtb * A[None, None, :]     # (B,cl,H) negative increments
+        cs = jnp.cumsum(dA, axis=1)     # (B,cl,H)
+        # --- intra-chunk quadratic term
+        CB = jnp.einsum("bin,bjn->bij", Cb.astype(jnp.float32),
+                        Bb.astype(jnp.float32))                     # (B,cl,cl)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]                  # (B,i,j,H)
+        ii, jj = jnp.arange(cl)[:, None], jnp.arange(cl)[None, :]
+        mask = (ii >= jj)[None, :, :, None]
+        L = jnp.where(mask, jnp.exp(seg), 0.0)                       # (B,i,j,H)
+        M = CB[:, :, :, None] * L * dtb[:, None, :, :]               # (B,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xb.astype(jnp.float32))
+        # --- contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn->bihp", Cb.astype(jnp.float32), state)
+        y_inter = y_inter * jnp.exp(cs)[..., None]
+        # --- state update
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)                   # (B,cl,H)
+        xw = xb.astype(jnp.float32) * (dtb * decay_to_end)[..., None]
+        new_state = (state * jnp.exp(cs[:, -1, :])[:, :, None, None]
+                     + jnp.einsum("bjhp,bjn->bhpn", xw, Bb.astype(jnp.float32)))
+        new_state = tag(new_state, "ssm_state")
+        return new_state, (y_intra + y_inter)
+
+    final_state, ys = jax.lax.scan(step, init_state, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, P)[:, :S]
+    return y, final_state
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray   # (B, W-1, di + 2*ds)
+    ssd: jnp.ndarray    # (B, H, P, N) f32
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, layers=None) -> SSMState:
+    di, ds = cfg.ssm_d_inner, cfg.ssm_state
+    L = layers if layers is not None else cfg.num_layers
+    return SSMState(
+        jnp.zeros((L, batch, cfg.ssm_conv_width - 1, di + 2 * ds), jnp.dtype(cfg.dtype)),
+        jnp.zeros((L, batch, cfg.ssm_heads, cfg.ssm_head_dim, ds), jnp.float32))
+
+
+def apply_ssm(cfg: ModelConfig, p, x):
+    """Full-sequence Mamba-2 block. x (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    di, ds, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    proj = tag(proj, "ssm_in")
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_conv(cfg, p, xbc)
+    xbc = tag(xbc, "ssm_conv")
+    xs = xbc[..., :di].reshape(B, S, nh, hp)
+    Bm = xbc[..., di: di + ds]
+    Cm = xbc[..., di + ds:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xs = shd.constrain(xs, ("batch", "seq", "ssm_heads", None))
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y.astype(x.dtype)
+    y = y + xs.astype(jnp.float32).astype(x.dtype) * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(tag(z, "ssm_gate"))
+    # grouped RMSNorm over d_inner
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+         ).astype(x.dtype) * p["norm_scale"].astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    out = shd.constrain(out, ("batch", "seq", "act_embed"))
+    return tag(out, "ssm_out")
+
+
+def decode_ssm(cfg: ModelConfig, p, x, state: Tuple[jnp.ndarray, jnp.ndarray]):
+    """One-token decode. x (B,1,d); state (conv (B,W-1,ch), ssd (B,H,P,N))."""
+    B = x.shape[0]
+    di, ds, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_state, ssd_state = state
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = xbc[:, 0]                                    # (B, ch)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B, W, ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv = window[:, 1:].astype(conv_state.dtype)
+    xs = conv_out[..., :di].reshape(B, nh, hp)
+    Bm = conv_out[..., di: di + ds]
+    Cm = conv_out[..., di + ds:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                      # (B,nh)
+    new_ssd = (ssd_state * dA[:, :, None, None]
+               + jnp.einsum("bhp,bn->bhpn", xs * dt[..., None], Bm))
+    y = jnp.einsum("bhpn,bn->bhp", new_ssd, Cm)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+         ).astype(x.dtype) * p["norm_scale"].astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, (new_conv, new_ssd)

@@ -1,0 +1,127 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the task spec: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d_model) directly.  Encoder blocks
+are non-causal self-attention; decoder blocks are causal self-attention +
+cross-attention into the encoder output.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.core.sites import tag
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.transformer import (_init_dense_block, _stack_init,
+                                      dense_block, _maybe_ckpt,
+                                      _dense_decode_block)
+
+
+def init_model(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.init_embedding(ks[0], cfg)
+    p["enc_pos"] = (jax.random.normal(ks[1], (cfg.encoder_seq, cfg.d_model))
+                    * 0.02).astype(jnp.dtype(cfg.param_dtype))
+    a["enc_pos"] = ("pos", "embed")
+    p["enc_blocks"], a["enc_blocks"] = _stack_init(
+        lambda k: _init_dense_block(k, cfg), ks[2], cfg.encoder_layers)
+    p["dec_blocks"], a["dec_blocks"] = _stack_init(
+        lambda k: _init_dense_block(k, cfg, cross=True), ks[3], cfg.num_layers)
+    p["ln_enc"], a["ln_enc"] = L.init_norm(cfg)
+    p["ln_f"], a["ln_f"] = L.init_norm(cfg)
+    return p, a
+
+
+def encode(cfg: ModelConfig, params, frames, *, policy=None):
+    """frames (B, S_enc, d) stub embeddings -> encoder output (B, S_enc, d)."""
+    B, S, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][:S][None].astype(cfg.dtype)
+    x = tag(x, "embed_out")
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = dense_block(cfg, lp, x, pos, causal=False)
+        return (x, aux + a), None
+
+    (x, _), _ = jax.lax.scan(_maybe_ckpt(body, policy),
+                             (x, jnp.zeros((), jnp.float32)),
+                             params["enc_blocks"])
+    return L.apply_norm(cfg, params["ln_enc"], x)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, memory=None, positions=None,
+            policy=None, **_):
+    """memory = precomputed frame embeddings (stub frontend).  Returns
+    (logits (B,S,V), aux)."""
+    assert memory is not None, "encdec needs frame embeddings via `memory`"
+    enc = encode(cfg, params, memory, policy=policy)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = L.embed_tokens(cfg, params["embed"], tokens, positions)
+
+    def body(carry, lp):
+        x, aux = carry
+        kv = attn.project_cross_kv(cfg, lp["xattn"], enc)
+        x, a = dense_block(cfg, lp, x, positions, cross_kv=kv)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_maybe_ckpt(body, policy),
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["dec_blocks"])
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    x = tag(x, "final_norm")
+    return L.unembed(cfg, params["embed"], x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, policy=None):
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          memory=batch["memory"], policy=policy)
+    loss = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+class EncDecState(NamedTuple):
+    attn_k: jnp.ndarray    # (L, B, Smax, Kh, D) decoder self KV
+    attn_v: jnp.ndarray
+    cross_k: jnp.ndarray   # (L, B, S_enc, Kh, D) static
+    cross_v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      memory=None, params=None) -> EncDecState:
+    assert memory is not None and params is not None
+    enc = encode(cfg, params, memory)
+    def kv_one(lp):
+        return attn.project_cross_kv(cfg, lp["xattn"], enc)
+    ck, cv = jax.vmap(kv_one)(params["dec_blocks"])
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return EncDecState(jnp.zeros(shape, dt), jnp.zeros(shape, dt), ck, cv,
+                       jnp.zeros((batch,), jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, tokens, state: EncDecState):
+    B = tokens.shape[0]
+    positions = state.pos
+    x = L.embed_tokens(cfg, params["embed"], tokens, positions[:, None])
+
+    def body(x, inp):
+        lp, k, v, ck, cv = inp
+        x, (k, v) = _dense_decode_block(cfg, lp, x, (k, v), positions,
+                                        cross_kv=(ck, cv))
+        return x, (k, v)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], state.attn_k, state.attn_v,
+                  state.cross_k, state.cross_v))
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits, state._replace(attn_k=nk, attn_v=nv, pos=state.pos + 1)

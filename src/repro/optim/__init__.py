@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, opt_state_axes  # noqa: F401
+from repro.optim.loss_scale import LossScaleState, init_loss_scale, check_finite, update_loss_scale  # noqa: F401
+from repro.optim.schedules import warmup_cosine  # noqa: F401

@@ -1,0 +1,49 @@
+"""Dynamic loss scaling (mixed-precision training).
+
+The skip/update decision is made **host-side** (a Python branch), exactly
+like PyTorch AMP: when gradients overflow, the optimizer dispatch is skipped
+and the iteration's operator sequence *shortens* — the paper's primary
+real-world source of varying operator sequences (§2.3).  The Chameleon
+runtime observes the changed dispatch stream through its lightweight
+profiler.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LossScaleState(NamedTuple):
+    scale: jnp.ndarray          # f32 scalar
+    growth_count: jnp.ndarray   # consecutive finite steps
+
+
+def init_loss_scale(initial: float = 2.0 ** 15) -> LossScaleState:
+    return LossScaleState(jnp.float32(initial), jnp.zeros((), jnp.int32))
+
+
+def check_finite(grads) -> jnp.ndarray:
+    leaves = [jnp.all(jnp.isfinite(g)) for g in jax.tree_util.tree_leaves(grads)]
+    ok = leaves[0]
+    for l in leaves[1:]:
+        ok = jnp.logical_and(ok, l)
+    return ok
+
+
+def update_loss_scale(state: LossScaleState, finite: bool,
+                      growth_interval: int = 200, factor: float = 2.0,
+                      min_scale: float = 1.0) -> LossScaleState:
+    """Host-side arithmetic (plain Python floats/bools)."""
+    scale = float(state.scale)
+    count = int(state.growth_count)
+    if finite:
+        count += 1
+        if count >= growth_interval:
+            scale *= factor
+            count = 0
+    else:
+        scale = max(scale / factor, min_scale)
+        count = 0
+    return LossScaleState(jnp.float32(scale), jnp.int32(count))

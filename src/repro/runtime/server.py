@@ -1,0 +1,127 @@
+"""Batched serving: slot-based continuous batching over the decode step.
+
+Requests prefill into a free slot of the shared decode state (batch-dim
+scatter), then every ``tick()`` advances all active slots by one token.
+Completed slots free immediately and the admission queue backfills them —
+the standard continuous-batching loop, minimal but real.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.models.registry import get_api
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 512, memory=None):
+        assert cfg.family in ("dense", "moe", "ssm"), \
+            "server prefill path covers dense/moe/ssm; others serve via decode-only"
+        self.cfg, self.params = cfg, params
+        self.api = get_api(cfg)
+        self.max_batch, self.max_len = max_batch, max_len
+        self.memory = memory
+        self.state = self.api.init_decode_state(cfg, max_batch, max_len,
+                                                memory=memory, params=params)
+        self.free_slots = list(range(max_batch))
+        self.active: Dict[int, Request] = {}
+        self.completed: Dict[int, Request] = {}
+        self.queue: collections.deque = collections.deque()
+        self._rid = 0
+        self._decode = jax.jit(
+            lambda p, t, s: self.api.decode_step(cfg, p, t, s))
+        from repro.models import transformer as T
+        self._prefill = jax.jit(
+            lambda p, toks: T.prefill(cfg, p, toks, max_len))
+        self.ticks = 0
+
+    # ----------------------------------------------------------- admission
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, eos_id))
+        self._admit()
+        return self._rid
+
+    def _admit(self):
+        while self.queue and self.free_slots:
+            req = self.queue.popleft()
+            slot = self.free_slots.pop()
+            req.slot = slot
+            logits, pstate = self._prefill(self.params, req.prompt[None, :])
+            # scatter single-request prefill state into the shared slots
+            self.state = self._write_slot(self.state, pstate, slot,
+                                          len(req.prompt))
+            first = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(first)
+            self.active[req.rid] = req
+
+    def _write_slot(self, state, pstate, slot: int, plen: int):
+        upd = {}
+        for name in state._fields:
+            cur = getattr(state, name)
+            new = getattr(pstate, name, None)
+            if cur is None or new is None:
+                upd[name] = cur
+                continue
+            if name == "pos":
+                upd[name] = cur.at[slot].set(plen)
+            else:
+                # (L, B, ...) — write batch row `slot`
+                upd[name] = cur.at[:, slot].set(new[:, 0].astype(cur.dtype))
+        return type(state)(**upd)
+
+    # ---------------------------------------------------------------- tick
+    def tick(self) -> Dict[int, int]:
+        """Advance all active slots one token; returns {rid: token}."""
+        if not self.active:
+            return {}
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for req in self.active.values():
+            tokens[req.slot, 0] = req.generated[-1]
+        logits, self.state = self._decode(self.params, jnp.asarray(tokens),
+                                          self.state)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        out = {}
+        finished = []
+        for req in self.active.values():
+            tok = int(nxt[req.slot])
+            req.generated.append(tok)
+            out[req.rid] = tok
+            if (len(req.generated) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                req.done = True
+                finished.append(req.rid)
+        for rid in finished:
+            req = self.active.pop(rid)
+            self.completed[rid] = req
+            self.free_slots.append(req.slot)
+        self._admit()
+        self.ticks += 1
+        return out
+
+    def run_until_done(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
+        for _ in range(max_ticks):
+            if not self.active and not self.queue:
+                break
+            self.tick()
+        return {rid: req.generated for rid, req in self.completed.items()}

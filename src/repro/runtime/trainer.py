@@ -1,0 +1,181 @@
+"""Trainer — eager-style dispatch loop with the Chameleon runtime in-line.
+
+Faithful to the paper's setting: each iteration dispatches *separate* jitted
+programs (grad step; optimizer step only when gradients are finite; optional
+on-the-fly validation), so the per-iteration operator sequence genuinely
+varies — loss-scale skips shorten it, eval extends it — and the Chameleon
+runtime tracks it exactly as §4 describes.
+
+Fault tolerance: async sharded checkpoints on a cadence, emergency
+checkpoint on exception, ``resume()`` from the latest step (optionally onto
+a different mesh — elastic restart), straggler detection on step times.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing.manager import CheckpointManager
+from repro.common.config import (ChameleonConfig, ModelConfig, TrainConfig)
+from repro.core.runtime import ChameleonRuntime
+from repro.data.synthetic import SyntheticTokens
+from repro.distributed import sharding as shd
+from repro.distributed import steps as S
+from repro.models.registry import get_api
+from repro.optim.adamw import adamw_init
+from repro.optim.loss_scale import (LossScaleState, init_loss_scale,
+                                    update_loss_scale)
+from repro.runtime.straggler import StragglerDetector
+
+
+@dataclass
+class TrainReport:
+    losses: List[float] = field(default_factory=list)
+    times: List[float] = field(default_factory=list)
+    skipped_steps: List[int] = field(default_factory=list)
+    eval_losses: Dict[int, float] = field(default_factory=dict)
+    stages: List[str] = field(default_factory=list)
+    checkpoints: List[str] = field(default_factory=list)
+    failures: List[str] = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 cham: Optional[ChameleonConfig] = None,
+                 mesh=None, data: Optional[SyntheticTokens] = None,
+                 eval_data: Optional[SyntheticTokens] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.cham = cham or ChameleonConfig(enabled=False)
+        self.mesh = mesh
+        self.api = get_api(cfg)
+        self.data = data or SyntheticTokens(cfg.vocab_size, 128, 8,
+                                            seed=tcfg.seed)
+        self.eval_data = eval_data or SyntheticTokens(
+            cfg.vocab_size, self.data.seq_len, self.data.global_batch,
+            seed=tcfg.seed + 1)
+        self.params, _ = self.api.init(cfg, jax.random.PRNGKey(tcfg.seed))
+        self.opt_state = adamw_init(self.params)
+        self.loss_scale = init_loss_scale(tcfg.loss_scale)
+        self.step = 0
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                      keep=tcfg.keep_checkpoints)
+        self.straggler = StragglerDetector()
+        self.report = TrainReport()
+
+        def step_builder(policy):
+            return jax.jit(S.make_grad_step(cfg, tcfg, policy))
+
+        self.rt = ChameleonRuntime(self.cham, step_builder)
+        self._apply = jax.jit(S.make_apply_step(cfg, tcfg))
+        self._eval = jax.jit(S.make_eval_step(cfg))
+        self._prepared = False
+
+    # ------------------------------------------------------------- utils
+    def _device_batch(self, batch: Dict[str, np.ndarray]):
+        out = {k: jnp.asarray(v) for k, v in batch.items()}
+        if self.cfg.family == "vlm":
+            B = out["tokens"].shape[0]
+            out["memory"] = jnp.zeros((B, self.cfg.image_tokens,
+                                       self.cfg.d_model),
+                                      jnp.dtype(self.cfg.dtype))
+        if self.cfg.family == "encdec":
+            B = out["tokens"].shape[0]
+            out["memory"] = jnp.zeros((B, self.cfg.encoder_seq,
+                                       self.cfg.d_model),
+                                      jnp.dtype(self.cfg.dtype))
+        return out
+
+    # ------------------------------------------------------------ resume
+    def resume(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        restored, extra = self.ckpt.restore(
+            latest, {"params": self.params, "opt": self.opt_state})
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.step = int(extra["step"])
+        self.loss_scale = LossScaleState(
+            jnp.float32(extra["loss_scale"]), jnp.int32(extra["growth"]))
+        self.data.restore(extra["data"])
+        return True
+
+    def _checkpoint(self, block: bool = False):
+        path = self.ckpt.save(
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            extra={"step": self.step,
+                   "loss_scale": float(self.loss_scale.scale),
+                   "growth": int(self.loss_scale.growth_count),
+                   "data": self.data.state()},
+            block=block)
+        self.report.checkpoints.append(path)
+
+    # -------------------------------------------------------------- train
+    def train(self, steps: Optional[int] = None,
+              fault_hook: Optional[Callable[[int], None]] = None
+              ) -> TrainReport:
+        steps = steps if steps is not None else self.tcfg.steps
+        batch = self._device_batch(self.data.get())
+        if not self._prepared:
+            self.rt.prepare((self.params, batch, self.loss_scale.scale))
+            self._prepared = True
+        end = self.step + steps
+        while self.step < end:
+            try:
+                self._one_step(batch, fault_hook)
+                batch = self._device_batch(self.data.get())
+            except (KeyboardInterrupt, Exception) as e:  # noqa: BLE001
+                self.report.failures.append(f"step {self.step}: {e!r}")
+                self.ckpt.wait()
+                self._checkpoint(block=True)   # emergency checkpoint
+                raise
+        self.ckpt.wait()
+        return self.report
+
+    def _one_step(self, batch, fault_hook=None):
+        t0 = time.perf_counter()
+        fn = self.rt.step_fn()
+        loss, grads, finite = fn(self.params, batch, self.loss_scale.scale)
+        jax.block_until_ready(loss)
+        self.rt.record_dispatch("train", fn,
+                                (self.params, batch, self.loss_scale.scale))
+        finite_h = bool(finite)
+        if finite_h:
+            self.params, self.opt_state, _m = self._apply(
+                self.params, self.opt_state, grads)
+            self.rt.record_dispatch("apply", self._apply,
+                                    (self.params, self.opt_state, grads))
+        else:
+            self.report.skipped_steps.append(self.step)
+        self.loss_scale = update_loss_scale(self.loss_scale, finite_h)
+
+        if (self.tcfg.eval_every
+                and self.step > 0
+                and self.step % self.tcfg.eval_every == 0):
+            ebatch = self._device_batch(self.eval_data.next_batch())
+            el = self._eval(self.params, ebatch)
+            self.rt.record_dispatch("eval", self._eval, (self.params, ebatch))
+            self.report.eval_losses[self.step] = float(el)
+
+        dt = time.perf_counter() - t0
+        stage = self.rt.end_iteration(dt)
+        self.straggler.observe(self.step, dt)
+        self.report.losses.append(float(loss))
+        self.report.times.append(dt)
+        self.report.stages.append(stage.value)
+        self.step += 1
+        # step is incremented BEFORE any failure can be raised for this
+        # iteration: the emergency checkpoint then records post-step state
+        # under step N+1 and resume does not replay an applied update.
+        if fault_hook is not None:
+            fault_hook(self.step - 1)
+
+        if (self.tcfg.checkpoint_every
+                and self.step % self.tcfg.checkpoint_every == 0):
+            self._checkpoint()

@@ -1,0 +1,60 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+mesh-dependent tests spawn a child process (see tests/test_distributed.py).
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.configs as C  # noqa: E402
+from repro.common.config import ChameleonConfig  # noqa: E402
+from repro.models.registry import get_api  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def llama_small():
+    """8-layer reduced llama2 — enough layers for meaningful policies."""
+    cfg = C.get_reduced("llama2_paper").replace(num_layers=8)
+    api = get_api(cfg)
+    params, axes = api.init(cfg, jax.random.PRNGKey(0))
+    return cfg, api, params, axes
+
+
+@pytest.fixture(scope="session")
+def llama_profile(llama_small):
+    """Baseline train-step profile of the small llama (shared: profiling is
+    the slowest fixture)."""
+    import jax.numpy as jnp
+    from repro.core.profiler import profile_jaxpr
+    cfg, api, params, _ = llama_small
+
+    def train_step(params, batch):
+        def lf(p):
+            loss, _ = api.loss_fn(cfg, p, batch)
+            return loss
+        loss, g = jax.value_and_grad(lf)(params)
+        return loss, jax.tree.map(lambda p, gg: p - 1e-3 * gg, params, g)
+
+    batch = {"tokens": jnp.ones((4, 128), jnp.int32),
+             "labels": jnp.ones((4, 128), jnp.int32)}
+    cj = jax.make_jaxpr(train_step)(params, batch)
+    prof = profile_jaxpr(cj, t_iter=1.0)
+    return prof, (params, batch, train_step)
+
+
+def run_child(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run a snippet in a child process with N host-platform devices."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    if r.returncode != 0:
+        raise AssertionError(f"child failed:\nSTDOUT:\n{r.stdout}\n"
+                             f"STDERR:\n{r.stderr[-4000:]}")
+    return r.stdout

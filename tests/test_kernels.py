@@ -1,0 +1,158 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention, flash_decode
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant_offload.ops import (compressed_offload, dequantize,
+                                             quantize)
+from repro.kernels.quant_offload.ref import dequantize_ref, quantize_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+RNG = np.random.RandomState(0)
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Kh,D,causal", [
+    (2, 256, 256, 4, 2, 64, True),
+    (1, 128, 384, 4, 4, 32, False),
+    (2, 100, 100, 2, 1, 64, True),      # non-multiple of block
+    (1, 512, 512, 8, 1, 128, True),     # MQA, MXU-aligned head dim
+    (1, 64, 192, 6, 3, 16, False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Sk, H, Kh, D, causal, dtype):
+    q = jnp.asarray(RNG.randn(B, Sq, H, D) * 0.3, dtype)
+    k = jnp.asarray(RNG.randn(B, Sk, Kh, D) * 0.3, dtype)
+    v = jnp.asarray(RNG.randn(B, Sk, Kh, D) * 0.3, dtype)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), causal=causal,
+                        sm_scale=1 / np.sqrt(D))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(jnp.swapaxes(ref, 1, 2), np.float32), **_tol(dtype))
+
+
+def test_flash_attention_grad():
+    q = jnp.asarray(RNG.randn(1, 128, 2, 32) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(1, 128, 2, 32) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(1, 128, 2, 32) * 0.3, jnp.float32)
+
+    def ref_fn(q):
+        r = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                          jnp.swapaxes(v, 1, 2), causal=True,
+                          sm_scale=1 / np.sqrt(32))
+        return jnp.sum(jnp.swapaxes(r, 1, 2) ** 2)
+
+    g1 = jax.grad(lambda q: jnp.sum(flash_attention(q, k, v) ** 2))(q)
+    g2 = jax.grad(ref_fn)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("Sk,lens", [(160, (100, 37)), (128, (128, 1)),
+                                     (512, (512, 300))])
+def test_flash_decode_sweep(Sk, lens):
+    B, H, Kh, D = 2, 4, 2, 32
+    q = jnp.asarray(RNG.randn(B, 1, H, D) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(B, Sk, Kh, D) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(B, Sk, Kh, D) * 0.3, jnp.float32)
+    lens = jnp.asarray(lens, jnp.int32)
+    out = flash_decode(q, k, v, lens)
+    ref = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), causal=False,
+                        sm_scale=1 / np.sqrt(D), lens=lens)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jnp.swapaxes(ref, 1, 2)),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 256, 3, 32, 16, 64),
+    (1, 128, 2, 64, 32, 128),
+    (1, 100, 1, 16, 8, 32),             # padded tail
+    (2, 64, 4, 32, 128, 64),            # big state
+])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk):
+    x = jnp.asarray(RNG.randn(B, S, H, P) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.randn(B, S, H)) * 0.1, jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.randn(H)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.randn(B, S, N) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.randn(B, S, N) * 0.3, jnp.float32)
+    y = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    ref = jnp.transpose(
+        ssd_ref(jnp.transpose(x, (0, 2, 1, 3)), jnp.transpose(dt, (0, 2, 1)),
+                A, Bm, Cm), (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_kernel_matches_model_impl():
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 2, 128, 3, 32, 16
+    x = jnp.asarray(RNG.randn(B, S, H, P) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.randn(B, S, H)) * 0.1, jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.randn(H)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.randn(B, S, N) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.randn(B, S, N) * 0.3, jnp.float32)
+    y1 = ssd_scan(x, dt, A, Bm, Cm, chunk=32)
+    y2, _ = ssd_chunked(x, dt, A, Bm, Cm, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------- quantization
+@pytest.mark.parametrize("shape", [(4, 96, 128), (256, 64), (3, 7, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matches_ref(shape, dtype):
+    x = jnp.asarray(RNG.randn(*shape), dtype)
+    q, s = quantize(x)
+    qr, sr = quantize_ref(x.reshape(-1, shape[-1]))
+    qa = np.asarray(q).reshape(-1, shape[-1]).astype(np.int32)
+    qb = np.asarray(qr).astype(np.int32)
+    # XLA may fuse x/s into x*(1/s): tolerate 1-quantum flips at the
+    # rounding boundary on <1% of entries
+    diff = np.abs(qa - qb)
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.01
+    np.testing.assert_allclose(np.asarray(s).reshape(-1, 1),
+                               np.asarray(sr), rtol=1e-6)
+    xh = dequantize(q, s, dtype)
+    # compare against the ref dequant of the *kernel's own* q (1-quantum
+    # rounding flips above would otherwise propagate a full int8 step)
+    xr = dequantize_ref(np.asarray(q).reshape(-1, shape[-1]),
+                        np.asarray(s).reshape(-1, 1), dtype).reshape(shape)
+    np.testing.assert_allclose(np.asarray(xh, np.float32),
+                               np.asarray(xr, np.float32), rtol=1e-5,
+                               atol=1e-5)
+
+
+@given(st.integers(1, 8), st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quant_error_bound(rows, cols, seed):
+    """|x - dq(q(x))| <= amax/127 per row (half-ulp of the int8 grid)."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(rows, cols) * 10 ** rng.uniform(-3, 3),
+                    jnp.float32)
+    q, s = quantize(x)
+    xh = dequantize(q, s, jnp.float32)
+    amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    err = np.abs(np.asarray(xh) - np.asarray(x))
+    assert np.all(err <= amax / 127.0 + 1e-12)
+
+
+def test_compressed_offload_grad_flows():
+    x = jnp.asarray(RNG.randn(8, 64), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(compressed_offload(x, "ffn_act") ** 2))(x)
+    assert g.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(g)))

@@ -1,0 +1,134 @@
+"""Fuzzy matching (§6.1/Appendix A) + Executor policy application (§6)."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ChameleonConfig
+from repro.core.executor import Executor
+from repro.core.matching import match_instances, pack_features, remap_policy
+from repro.core.memtrace import build_timeline
+from repro.core.policy import generate_policy
+from repro.core.profiler import ProfileData, TensorInstance
+
+from tests.test_simulator_policy import synth_profile
+
+
+def test_identity_matching():
+    prof = synth_profile()
+    res = match_instances(prof, prof)
+    assert len(res.mapping) == len(prof.candidates)
+    assert not res.unmatched
+    for a, b in res.mapping.items():
+        assert a == b
+
+
+def test_matching_survives_shift():
+    """Minor sequence extension (ops inserted) shifts op indices; features
+    still match within the position tolerance."""
+    old = synth_profile(n_layers=8, ops_per_layer=10)
+    new = synth_profile(n_layers=8, ops_per_layer=11)  # ~10% more ops
+    res = match_instances(old, new)
+    assert len(res.mapping) == 8
+    # layer identity preserved
+    by_uid_new = {t.uid: t for t in new.candidates}
+    by_uid_old = {t.uid: t for t in old.candidates}
+    for o, n in res.mapping.items():
+        assert by_uid_old[o].layer == by_uid_new[n].layer
+
+
+def test_matching_rejects_dtype_change():
+    old = synth_profile()
+    new = synth_profile()
+    for t in new.tensors:
+        t.dtype_code = 7
+    res = match_instances(old, new)
+    assert not res.mapping
+    assert len(res.unmatched) == len(old.candidates)
+
+
+def test_features_are_integers():
+    prof = synth_profile()
+    for t in prof.candidates:
+        f = pack_features(t, prof.n_ops)
+        assert isinstance(f, int) and f >= 0
+
+
+def test_remap_policy_hit_rate():
+    prof = synth_profile(n_layers=8, t_iter=30.0)
+    tl = build_timeline(prof)
+    pol = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                          int(tl.peak * 0.6))
+    new = synth_profile(n_layers=8, ops_per_layer=11, t_iter=30.0)
+    entries, hit = remap_policy(pol, prof, new)
+    assert hit >= 0.9
+    sites = {e.site for e in entries}
+    assert sites == {e.site for e in pol.entries}
+
+
+# ----------------------------------------------------- executor application
+def test_offload_policy_grads_exact(llama_small):
+    """The applied swap policy must not change training math (paper Fig 7:
+    loss curves overlap exactly)."""
+    cfg, api, params, _ = llama_small
+    batch = {"tokens": jnp.ones((2, 64), jnp.int32),
+             "labels": jnp.ones((2, 64), jnp.int32)}
+
+    def loss(p, policy):
+        l, _ = api.loss_fn(cfg, p, batch, policy=policy)
+        return l
+
+    ex = Executor(ChameleonConfig())
+    base = ex.baseline().to_jax()
+    l0, g0 = jax.jit(lambda p: jax.value_and_grad(
+        lambda q: loss(q, base))(p))(params)
+
+    off = ex.conservative(None).to_jax()   # offload every site
+    l1, g1 = jax.jit(lambda p: jax.value_and_grad(
+        lambda q: loss(q, off))(p))(params)
+
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=1e-4)
+
+
+def test_executor_lower_modes(llama_profile):
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    ccfg = ChameleonConfig(hbm_budget_bytes=int(tl.peak * 0.7),
+                           allow_remat_fallback=True)
+    pol = generate_policy(prof, ccfg, int(tl.peak * 0.7), timeline=tl)
+    ex = Executor(ccfg)
+    ap = ex.lower(pol, prof)
+    assert ap.offload, "policy with MREs must offload something"
+    assert not (ap.offload & ap.save)
+    assert not (ap.offload & ap.remat)
+    jp = ap.to_jax()
+    assert jp is not None
+    # no-remat-fallback variant keeps cheap sites saved
+    ap2 = ex.lower(pol, prof, remat_fallback=False)
+    assert not ap2.remat
+
+
+def test_full_remat_policy_grads_exact(llama_small):
+    cfg, api, params, _ = llama_small
+    batch = {"tokens": jnp.ones((2, 64), jnp.int32),
+             "labels": jnp.ones((2, 64), jnp.int32)}
+
+    def loss(p, policy):
+        l, _ = api.loss_fn(cfg, p, batch, policy=policy)
+        return l
+
+    l0, g0 = jax.jit(lambda p: jax.value_and_grad(
+        lambda q: loss(q, None))(p))(params)
+    l1, g1 = jax.jit(lambda p: jax.value_and_grad(
+        lambda q: loss(q, "full_remat"))(p))(params)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=1e-4)

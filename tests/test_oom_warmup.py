@@ -1,0 +1,79 @@
+"""WarmUp-stage OOM handling (Algo 3, compile-time form) + sites module."""
+import numpy as np
+import pytest
+
+from repro.common.config import ChameleonConfig
+from repro.core.memtrace import build_timeline
+from repro.core.oom import passive_swap_fit, warmup_offload_sites
+from repro.core.policy import ChameleonOOMError
+from repro.core.profiler import ProfileData, TensorInstance
+from repro.core.sites import OFFLOAD_SITES, SITE_INDEX, base_site, site_prefix, tag
+
+from tests.test_simulator_policy import synth_profile
+
+
+def test_passive_swap_reaches_budget():
+    prof = synth_profile(n_layers=10)
+    tl = build_timeline(prof)
+    budget = int(tl.peak * 0.5)
+    absent, peak, order = passive_swap_fit(prof, ChameleonConfig(), budget)
+    assert peak <= budget
+    assert len(absent) >= 1
+    assert all(t.uid in absent for t in order)
+
+
+def test_passive_swap_closest_size_rule():
+    """Algo 3 line 9: pick the tensor whose size is closest to the deficit."""
+    n_ops = 100
+    tensors = [
+        TensorInstance(0, 100, 10, 90, site="resid_post", layer=0),
+        TensorInstance(1, 55, 10, 90, site="resid_post", layer=1),
+        TensorInstance(2, 300, 10, 90, site="resid_post", layer=2),
+    ]
+    prof = ProfileData(np.zeros(n_ops, np.int32), tensors, 1.0, 0)
+    # peak 455, budget 400 -> deficit 55 -> must pick uid=1 first
+    absent, peak, order = passive_swap_fit(prof, ChameleonConfig(), 400)
+    assert order[0].uid == 1
+    assert peak <= 400
+
+
+def test_passive_swap_raises_when_impossible():
+    prof = synth_profile(n_layers=2)
+    prof.tensors.append(TensorInstance(99, 10 << 30, 0, prof.n_ops))
+    with pytest.raises(ChameleonOOMError):
+        passive_swap_fit(prof, ChameleonConfig(), 1 << 20)
+
+
+def test_warmup_offload_sites():
+    prof = synth_profile(n_layers=8)
+    tl = build_timeline(prof)
+    sites = warmup_offload_sites(prof, ChameleonConfig(), int(tl.peak * 0.5))
+    assert sites == {"resid_post"}
+
+
+# ------------------------------------------------------------------- sites
+def test_site_vocabulary_unique():
+    assert len(OFFLOAD_SITES) == len(set(OFFLOAD_SITES))
+    assert all(SITE_INDEX[s] == i for i, s in enumerate(OFFLOAD_SITES))
+
+
+def test_tag_rejects_unknown_site():
+    import jax.numpy as jnp
+    with pytest.raises(AssertionError):
+        tag(jnp.ones(3), "not_a_site")
+
+
+def test_site_prefix_and_base():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        with site_prefix("l3/"):
+            return tag(x, "ffn_pre")
+
+    cj = jax.make_jaxpr(f)(jnp.ones(4))
+    names = [e.params["name"] for e in cj.jaxpr.eqns
+             if e.primitive.name == "name"]
+    assert names == ["l3/ffn_pre"]
+    assert base_site("l3/ffn_pre") == "ffn_pre"
+    assert base_site("ffn_pre") == "ffn_pre"

@@ -1,0 +1,108 @@
+"""Detailed-mode profiler (§4) + memory-timeline reconstruction (Fig 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memtrace import MemoryTimeline, build_timeline
+from repro.core.mrl import MRL
+from repro.core.profiler import ProfileData, TensorInstance
+
+
+def test_profile_finds_candidates(llama_profile):
+    prof, _ = llama_profile
+    assert prof.n_ops > 500
+    assert prof.scan_layers == 8
+    sites = {t.site for t in prof.candidates}
+    # the big residual families must all be tagged
+    for s in ("ffn_pre", "qkv_proj", "resid_post", "attn_out"):
+        assert s in sites, f"missing candidate site {s}"
+    # per-layer instances exist
+    layers = sorted({t.layer for t in prof.candidates if t.layer >= 0})
+    assert layers == list(range(8))
+
+
+def test_profile_sawtooth_liveness(llama_profile):
+    """Residual slices born in fwd layer order die in reverse bwd order."""
+    prof, _ = llama_profile
+    by_site = {}
+    for t in prof.candidates:
+        if t.site == "ffn_pre" and t.layer >= 0:
+            by_site.setdefault(t.layer, t)
+    births = [by_site[i].birth for i in sorted(by_site)]
+    deaths = [by_site[i].death for i in sorted(by_site)]
+    assert births == sorted(births), "births must follow layer order"
+    assert deaths == sorted(deaths, reverse=True), \
+        "deaths must be reverse layer order (backward scan)"
+
+
+def test_timeline_peak_in_middle(llama_profile):
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    # training memory peaks at the fwd->bwd boundary, not at the edges
+    assert 0.2 * prof.n_ops < tl.peak_op < 0.8 * prof.n_ops
+    assert tl.peak > prof.static_bytes
+
+
+def test_static_bytes_counts_params(llama_profile, llama_small):
+    prof, _ = llama_profile
+    import jax
+    import numpy as np
+    _, _, params, _ = llama_small
+    pbytes = sum(np.prod(x.shape) * x.dtype.itemsize
+                 for x in jax.tree_util.tree_leaves(params))
+    assert prof.static_bytes >= pbytes  # params (+batch) are static inputs
+
+
+# ---------------------------- property tests on the timeline machinery ----
+@st.composite
+def tensor_sets(draw):
+    n_ops = draw(st.integers(10, 200))
+    n = draw(st.integers(1, 40))
+    tensors = []
+    for uid in range(n):
+        b = draw(st.integers(0, n_ops - 1))
+        d = draw(st.integers(b + 1, n_ops))
+        nbytes = draw(st.integers(1, 10 ** 6))
+        tensors.append(TensorInstance(uid, nbytes, b, d))
+    return n_ops, tensors
+
+
+@given(tensor_sets())
+@settings(max_examples=60, deadline=None)
+def test_timeline_invariants(ts):
+    n_ops, tensors = ts
+    prof = ProfileData(np.zeros(n_ops, np.int32), tensors, 1.0, 0)
+    tl = build_timeline(prof)
+    assert np.all(tl.usage >= 0)
+    assert tl.peak == tl.usage.max()
+    # peak equals the max over ops of the sum of live tensors
+    manual = max(sum(t.nbytes for t in tensors if t.birth <= i < t.death)
+                 for i in range(n_ops + 1))
+    assert tl.peak == manual
+
+
+@given(tensor_sets(), st.floats(0.3, 0.95))
+@settings(max_examples=40, deadline=None)
+def test_mrl_construction(ts, frac):
+    n_ops, tensors = ts
+    prof = ProfileData(np.zeros(n_ops, np.int32), tensors, 1.0, 0)
+    tl = build_timeline(prof)
+    budget = int(tl.peak * frac)
+    mrl = MRL.from_timeline(tl, budget)
+    if tl.peak > budget:
+        assert not mrl.is_empty()
+        assert mrl.max_required() == tl.peak - budget
+    # decrementing the full range by the max requirement clears it
+    mrl.decrement(0, n_ops + 1, mrl.max_required())
+    assert mrl.is_empty()
+
+
+def test_mrl_partial_decrement():
+    usage = np.array([0, 10, 20, 30, 20, 10, 0], np.int64)
+    tl = MemoryTimeline(usage, 0, 30, 3)
+    mrl = MRL.from_timeline(tl, 15)
+    assert list(mrl.ops) == [2, 3, 4]
+    mrl.decrement(2, 3, 100)         # only op 2 covered
+    assert not mrl.is_empty()
+    assert list(mrl.remaining_ops) == [3, 4]
+    assert mrl.covered_count(0, 10) == 2

@@ -1,0 +1,179 @@
+"""Optimizer / loss-scale / schedules / data pipeline / checkpointing."""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing.manager import CheckpointManager
+from repro.common.config import TrainConfig
+from repro.data.synthetic import SyntheticTokens
+from repro.optim.adamw import (adamw_init, adamw_update,
+                               clip_by_global_norm, global_norm)
+from repro.optim.loss_scale import (check_finite, init_loss_scale,
+                                    update_loss_scale)
+from repro.optim.schedules import warmup_cosine
+
+
+# ------------------------------------------------------------------ adamw
+def test_adamw_matches_manual():
+    tcfg = TrainConfig(learning_rate=0.1, weight_decay=0.0)
+    p = {"w": jnp.asarray([1.0, 2.0], jnp.float32)}
+    g = {"w": jnp.asarray([0.5, -0.5], jnp.float32)}
+    st = adamw_init(p)
+    new_p, st2 = adamw_update(p, g, st, tcfg, jnp.float32(0.1))
+    # manual first-step adam: mhat = g, vhat = g^2 -> update ~ -lr*sign(g)
+    exp = np.asarray([1.0, 2.0]) - 0.1 * np.sign([0.5, -0.5])
+    np.testing.assert_allclose(np.asarray(new_p["w"]), exp, rtol=1e-4)
+    assert int(st2.step) == 1
+
+
+def test_adamw_weight_decay():
+    tcfg = TrainConfig(learning_rate=0.1, weight_decay=0.5)
+    p = {"w": jnp.asarray([10.0], jnp.float32)}
+    g = {"w": jnp.asarray([0.0], jnp.float32)}
+    st = adamw_init(p)
+    new_p, _ = adamw_update(p, g, st, tcfg, jnp.float32(0.1))
+    assert float(new_p["w"][0]) < 10.0  # decay shrinks
+
+
+def test_adamw_master_for_bf16():
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw_init(p)
+    assert st.master is not None
+    assert st.master["w"].dtype == jnp.float32
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((100,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) == pytest.approx(100.0, rel=1e-5)
+
+
+# -------------------------------------------------------------- loss scale
+def test_loss_scale_dynamics():
+    st = init_loss_scale(1024.0)
+    st = update_loss_scale(st, finite=False)
+    assert float(st.scale) == 512.0
+    for _ in range(200):
+        st = update_loss_scale(st, finite=True, growth_interval=200)
+    assert float(st.scale) == 1024.0
+
+
+def test_check_finite():
+    assert bool(check_finite({"a": jnp.ones(3)}))
+    assert not bool(check_finite({"a": jnp.asarray([1.0, np.inf])}))
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, 1.0, 10, 100)) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1.0, rel=1e-3)
+    assert lrs[5] < lrs[9]           # warming up
+    assert lrs[50] > lrs[99]         # decaying
+    assert lrs[99] >= 0.1 * 0.99     # final_frac floor
+
+
+# -------------------------------------------------------------------- data
+def test_data_deterministic():
+    a = SyntheticTokens(1000, 32, 8, seed=3)
+    b = SyntheticTokens(1000, 32, 8, seed=3)
+    for _ in range(3):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    assert np.all(a.next_batch()["tokens"] < 1000)
+
+
+def test_data_labels_shifted():
+    d = SyntheticTokens(1000, 32, 4, seed=0)
+    b = d.next_batch()
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_host_shards_disjoint():
+    full = SyntheticTokens(1000, 16, 8, seed=1, host_index=0, host_count=1)
+    h0 = SyntheticTokens(1000, 16, 8, seed=1, host_index=0, host_count=2)
+    h1 = SyntheticTokens(1000, 16, 8, seed=1, host_index=1, host_count=2)
+    f, a, b = full.next_batch(), h0.next_batch(), h1.next_batch()
+    np.testing.assert_array_equal(np.concatenate([a["tokens"], b["tokens"]]),
+                                  f["tokens"])
+
+
+def test_data_resume_exact():
+    d = SyntheticTokens(1000, 16, 4, seed=2)
+    d.next_batch()
+    st = d.state()
+    want = d.next_batch()
+    d2 = SyntheticTokens(1000, 16, 4, seed=0)
+    d2.restore(st)
+    got = d2.next_batch()
+    np.testing.assert_array_equal(want["tokens"], got["tokens"])
+
+
+def test_data_prefetch_thread():
+    d = SyntheticTokens(1000, 16, 4, seed=5).start()
+    try:
+        b1 = d.get()
+        b2 = d.get()
+        assert not np.array_equal(b1["tokens"], b2["tokens"])
+    finally:
+        d.stop()
+
+
+# ------------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip():
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(10, dtype=jnp.float32),
+                "nested": {"b": jnp.ones((3, 3), jnp.bfloat16)}}
+        mgr.save(5, {"params": tree}, extra={"step": 5}, block=True)
+        restored, extra = mgr.restore(5, {"params": tree})
+        assert extra["step"] == 5
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_gc_keeps_n():
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"params": {"a": jnp.ones(2)}}, block=True)
+        assert mgr.all_steps() == [3, 4]
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_corruption_detected():
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d, keep=2)
+        path = mgr.save(7, {"params": {"a": jnp.ones(64)}}, block=True)
+        npz = [f for f in os.listdir(path) if f.endswith(".npz")][0]
+        fp = os.path.join(path, npz)
+        with open(fp, "r+b") as f:
+            f.seek(100)
+            f.write(b"\xff\xff\xff")
+        with pytest.raises(IOError):
+            mgr.restore(7, {"params": {"a": jnp.ones(64)}})
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_async():
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d, keep=3)
+        mgr.save(1, {"params": {"a": jnp.ones(1000)}})  # async
+        mgr.wait()
+        assert mgr.latest_step() == 1
+    finally:
+        shutil.rmtree(d)

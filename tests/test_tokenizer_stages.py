@@ -1,0 +1,109 @@
+"""Unit + property tests for the Lightweight profiler (§4) and Algo 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import ChameleonConfig
+from repro.core.stages import Stage, StageMachine
+from repro.core.tokenizer import (OpVocab, sequence_signature, similarity,
+                                  tokenize_jaxpr)
+
+
+def test_tokenize_simple():
+    cj = jax.make_jaxpr(lambda x: jnp.tanh(x) @ x.T)(jnp.ones((4, 4)))
+    toks = tokenize_jaxpr(cj)
+    assert toks.dtype == np.int32 and len(toks) >= 2
+
+
+def test_tokenize_scan_unrolls():
+    def f(x):
+        return jax.lax.scan(lambda c, _: (jnp.tanh(c @ c.T) @ c, None),
+                            x, None, length=7)[0]
+    toks = tokenize_jaxpr(jax.make_jaxpr(f)(jnp.ones((4, 4))))
+    # body ops appear 7x
+    vals, counts = np.unique(toks, return_counts=True)
+    assert counts.max() >= 7
+
+
+def test_similarity_identical():
+    a = np.array([1, 2, 3, 2, 1], np.int32)
+    ld, cos = similarity(a, a.copy())
+    assert ld == 0.0 and cos == pytest.approx(1.0)
+
+
+def test_similarity_detects_extension():
+    a = np.array([1, 2, 3] * 30, np.int32)
+    b = np.concatenate([a, np.array([4, 5, 6] * 20, np.int32)])
+    ld, cos = similarity(a, b)
+    assert ld > 0.05
+    assert cos < 1.0
+
+
+@given(st.lists(st.integers(1, 20), min_size=5, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_similarity_permutation_invariant_histogram(seq):
+    a = np.array(seq, np.int32)
+    rng = np.random.RandomState(0)
+    b = a.copy()
+    rng.shuffle(b)
+    ld, cos = similarity(a, b)
+    assert ld == 0.0
+    assert cos == pytest.approx(1.0, abs=1e-9)
+
+
+@given(st.lists(st.integers(1, 10), min_size=10, max_size=100),
+       st.lists(st.integers(1, 10), min_size=10, max_size=100))
+@settings(max_examples=50, deadline=None)
+def test_similarity_bounds(sa, sb):
+    ld, cos = similarity(np.array(sa, np.int32), np.array(sb, np.int32))
+    assert 0.0 <= ld <= 1.0
+    assert -1e-9 <= cos <= 1.0 + 1e-9
+
+
+def _seq(n, base=1):
+    return np.full((n,), base, np.int32)
+
+
+def test_stage_machine_algo1():
+    cfg = ChameleonConfig(m_warmup_stable=2, n_genpolicy_steps=3)
+    sm = StageMachine(cfg)
+    a = np.array([1, 2, 3] * 50, np.int32)
+    stages = [sm.observe(a, i).value for i in range(12)]
+    # init, then 2 stable to leave WarmUp, then 3 to leave GenPolicy
+    assert stages[0] == "WarmUp"
+    assert "GenPolicy" in stages and "Stable" in stages
+    assert stages.index("GenPolicy") == 3
+    assert stages.index("Stable") == 7
+
+
+def test_stage_machine_resets_on_change():
+    cfg = ChameleonConfig(m_warmup_stable=1, n_genpolicy_steps=1)
+    sm = StageMachine(cfg)
+    a = np.array([1, 2, 3] * 50, np.int32)
+    for i in range(6):
+        sm.observe(a, i)
+    assert sm.stage is Stage.STABLE
+    b = np.concatenate([a, np.array([7, 8, 9] * 30, np.int32)])
+    assert sm.observe(b, 6) is Stage.WARMUP
+    assert sm.stable_step == 0
+
+
+def test_stage_machine_tolerates_minor_change():
+    """<5% length change with high cosine must NOT reset (fuzzy-matching
+    territory, §6.1)."""
+    cfg = ChameleonConfig(m_warmup_stable=1, n_genpolicy_steps=1)
+    sm = StageMachine(cfg)
+    a = np.array([1, 2, 3] * 100, np.int32)
+    for i in range(6):
+        sm.observe(a, i)
+    b = np.concatenate([a, np.array([1, 2], np.int32)])  # +0.7%
+    assert sm.observe(b, 7) is Stage.STABLE
+
+
+def test_sequence_signature_concat():
+    s = sequence_signature([np.array([1, 2], np.int32),
+                            np.array([], np.int32),
+                            np.array([3], np.int32)])
+    np.testing.assert_array_equal(s, [1, 2, 3])
