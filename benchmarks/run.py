@@ -15,6 +15,7 @@ MODULES = [
     "table4_max_size",
     "fig7_stability",
     "fig8_reuse_interval",
+    "hostmem_bench",
     "kernels_bench",
     "roofline",
 ]

@@ -210,6 +210,26 @@ SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
 MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
 
 
+# host-link calibration sweep: 64 KiB .. 64 MiB (single source of truth —
+# HostMemConfig default, bwmodel default, and the benchmark all use this)
+HOSTMEM_CALIBRATION_SIZES: Tuple[int, ...] = tuple(
+    1 << p for p in range(16, 27, 2))
+
+
+@dataclass(frozen=True)
+class HostMemConfig:
+    """Host-memory tier (repro.hostmem): pinned pool + transfer engine +
+    measured bandwidth model.  Disabled -> the simulator prices transfers
+    with the constant ``host_link_gbps`` exactly as the paper does."""
+    enabled: bool = True
+    pool_bytes: int = 0                          # 0 -> uncapped host pool
+    min_class_bytes: int = 1 << 12               # smallest slab size class
+    engine_depth: int = 2                        # in-flight copies (double buffer)
+    calibrate: bool = False                      # measure the link at startup
+    calibration_sizes: Tuple[int, ...] = HOSTMEM_CALIBRATION_SIZES
+    calibration_iters: int = 3
+
+
 @dataclass(frozen=True)
 class ChameleonConfig:
     """Paper hyperparameters (§4, §5, §7.1)."""
@@ -226,6 +246,7 @@ class ChameleonConfig:
     allow_remat_fallback: bool = True            # beyond-paper: 3-way save/offload/remat
     peak_flops: float = 197e12                   # v5e bf16
     hbm_gbps: float = 819.0
+    hostmem: HostMemConfig = HostMemConfig()     # host-memory tier (repro.hostmem)
 
 
 @dataclass(frozen=True)

@@ -64,6 +64,19 @@ class SwapPolicy:
     def swapped_bytes(self) -> int:
         return sum(e.nbytes for e in self.entries)
 
+    # ---- §5.4.2 free-time hand-off to the host-memory tier -------------
+    @staticmethod
+    def entry_tag(e: PolicyEntry) -> str:
+        return f"{e.site or 'tensor'}:{e.layer}:{e.uid}"
+
+    def register_free_times(self, engine) -> int:
+        """Hand the simulator-planned release points to a
+        ``repro.hostmem.engine.TransferEngine`` so swap-out completion
+        events carry them (the custom-recordStream analogue)."""
+        for e in self.entries:
+            engine.plan_release(self.entry_tag(e), e.swap_out_done_op)
+        return len(self.entries)
+
     def summary(self) -> str:
         gib = 1 / 2 ** 30
         return (f"SwapPolicy: {len(self.entries)} tensors, "
@@ -76,11 +89,12 @@ class SwapPolicy:
 
 def generate_policy(prof: ProfileData, cfg: ChameleonConfig,
                     budget: Optional[int] = None,
-                    timeline: Optional[MemoryTimeline] = None) -> SwapPolicy:
+                    timeline: Optional[MemoryTimeline] = None,
+                    bwmodel=None, engine=None) -> SwapPolicy:
     budget = budget if budget is not None else cfg.hbm_budget_bytes
     tl = timeline or build_timeline(prof)
     mrl = MRL.from_timeline(tl, budget)
-    sim = Simulator(prof, tl.peak_op, cfg)
+    sim = Simulator(prof, tl.peak_op, cfg, bwmodel=bwmodel)
     entries: List[PolicyEntry] = []
     chosen: Set[int] = set()
 
@@ -121,5 +135,8 @@ def generate_policy(prof: ProfileData, cfg: ChameleonConfig,
     usage = np.cumsum(delta)[: n + 1]
     projected = int(usage.max(initial=0)) + prof.static_bytes
 
-    return SwapPolicy(entries, projected, tl.peak, budget,
-                      sim.stall_time, prof.t_iter, n)
+    pol = SwapPolicy(entries, projected, tl.peak, budget,
+                     sim.stall_time, prof.t_iter, n)
+    if engine is not None:                          # hostmem free-time hand-off
+        pol.register_free_times(engine)
+    return pol

@@ -49,12 +49,16 @@ class PolicyVariant:
 class ChameleonRuntime:
     def __init__(self, cfg: ChameleonConfig,
                  step_builder: Callable[[Optional[Any]], Callable],
-                 budget: Optional[int] = None):
+                 budget: Optional[int] = None, hostmem=None):
         self.cfg = cfg
         self.budget = budget if budget is not None else cfg.hbm_budget_bytes
         self.step_builder = step_builder
         self.executor = Executor(cfg)
         self.machine = StageMachine(cfg)
+        if hostmem is None and cfg.enabled and cfg.hostmem.enabled:
+            from repro.hostmem import HostMemTier
+            hostmem = HostMemTier.from_chameleon(cfg)
+        self.hostmem = hostmem
         self._step_cache: Dict[str, Callable] = {}
         self._trace_cache: Dict[Tuple, np.ndarray] = {}
         self._jaxpr_cache: Dict[Tuple, Any] = {}
@@ -186,9 +190,14 @@ class ChameleonRuntime:
         groups = max(1, int((prof.scan_layers or 32) * knob))
         cfg_v = dataclasses.replace(self.cfg, groups_per_phase=groups)
         tl = build_timeline(prof)
+        hm = self.hostmem
         try:
             if tl.peak > self.budget:
-                swap = generate_policy(prof, cfg_v, self.budget, timeline=tl)
+                # bwmodel prices every variant; free-times are handed to the
+                # engine only for the variant that wins (_select_best)
+                swap = generate_policy(
+                    prof, cfg_v, self.budget, timeline=tl,
+                    bwmodel=hm.bwmodel if hm else None)
                 applied = self.executor.lower(swap, prof)
             else:
                 swap, applied = None, self.executor.baseline()
@@ -204,6 +213,14 @@ class ChameleonRuntime:
         if timed:
             self.best = min(timed, key=lambda v: v.measured_t)
             self.applied = self.best.applied
+            if self.hostmem is not None and self.best.swap is not None:
+                # §5.4.2 hand-off: only the applied policy's release points.
+                # NOTE: the executor does not yet route its swap traffic
+                # through the engine, so release_op is observable but not
+                # yet acted on (ROADMAP: "feed engine.release_op back into
+                # the executor").
+                self.hostmem.engine.clear_planned_releases()
+                self.best.swap.register_free_times(self.hostmem.engine)
 
     # ----------------------------------------------------------- reports
     def stats(self) -> dict:
@@ -214,4 +231,5 @@ class ChameleonRuntime:
             "best_knob": self.best.knob if self.best else None,
             "applied": self.applied.fingerprint,
             "profiling_overhead_s": self.profiling_overhead_s,
+            "hostmem": self.hostmem.stats() if self.hostmem else None,
         }

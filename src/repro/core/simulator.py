@@ -60,11 +60,15 @@ class PolicyEntry:
 
 
 class Simulator:
-    def __init__(self, prof: ProfileData, peak_op: int, cfg: ChameleonConfig):
+    def __init__(self, prof: ProfileData, peak_op: int, cfg: ChameleonConfig,
+                 bwmodel=None):
         self.prof = prof
         self.cfg = cfg
         self.peak_op = peak_op
         self.bandwidth = cfg.host_link_gbps * 1e9        # B in Eq. 3
+        # measured host-link curve (repro.hostmem.bwmodel) — when calibrated
+        # it prices transfers size-dependently instead of with the constant
+        self.bwmodel = bwmodel
         self.layers = self._build_layers()
         self._starts = [l.start_op for l in self.layers]
         self.stall_time = 0.0
@@ -101,7 +105,9 @@ class Simulator:
         return max(0, min(i, len(self.layers) - 1))
 
     def t_swap(self, nbytes: int) -> float:
-        return nbytes / self.bandwidth                    # Eq. 3
+        if self.bwmodel is not None and self.bwmodel.is_calibrated:
+            return self.bwmodel.transfer_time(nbytes)     # measured curve
+        return nbytes / self.bandwidth                    # Eq. 3 constant
 
     # -------------------------------------------------- §5.4.1 swap-in
     def place_swap_in(self, cand: Candidate) -> Optional[PolicyEntry]:

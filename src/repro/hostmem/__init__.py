@@ -1,0 +1,92 @@
+"""repro.hostmem — the host-memory tier.
+
+One shared substrate under both branches of the system:
+
+  * **training** (§5.4 policy execution): the simulator prices swaps with
+    the measured :class:`BandwidthModel`, the policy's free-times hand
+    off to the :class:`TransferEngine`'s swap-out completion events, and
+    every staged tensor recycles through the :class:`PinnedSlabPool`;
+  * **serving**: :class:`KVSpillManager` parks idle decode slots in the
+    same pool so admission exceeds HBM-resident slots.
+
+``HostMemTier`` bundles the four components with consistent wiring.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.common.config import ChameleonConfig, HostMemConfig
+from repro.hostmem import metrics as _metrics
+from repro.hostmem.bwmodel import BandwidthModel
+from repro.hostmem.engine import TransferEngine, TransferEvent
+from repro.hostmem.kvspill import KVSpillManager, SpilledSlot
+from repro.hostmem.pool import HostBlock, HostMemError, PinnedSlabPool
+
+__all__ = [
+    "BandwidthModel", "HostBlock", "HostMemConfig", "HostMemError",
+    "HostMemTier", "KVSpillManager", "PinnedSlabPool", "SpilledSlot",
+    "TransferEngine", "TransferEvent",
+]
+
+
+class HostMemTier:
+    """Pool + engine + bandwidth model + kv-spill, wired together."""
+
+    def __init__(self, cfg: Optional[HostMemConfig] = None, *,
+                 constant_gbps: float = 32.0):
+        self.cfg = cfg or HostMemConfig()
+        self.pool = PinnedSlabPool(
+            capacity_bytes=self.cfg.pool_bytes or None,
+            min_class_bytes=self.cfg.min_class_bytes)
+        self.bwmodel = BandwidthModel(constant_gbps)
+        self.engine = TransferEngine(self.pool, depth=self.cfg.engine_depth,
+                                     bwmodel=self.bwmodel)
+        self.kvspill = KVSpillManager(self.pool, self.engine)
+        if self.cfg.calibrate:
+            self.calibrate()
+
+    @classmethod
+    def from_chameleon(cls, ccfg: ChameleonConfig) -> Optional["HostMemTier"]:
+        """Build the tier a ChameleonConfig asks for (None when disabled)."""
+        if not ccfg.hostmem.enabled:
+            return None
+        return cls(ccfg.hostmem, constant_gbps=ccfg.host_link_gbps)
+
+    def calibrate(self, sizes=None, iters=None) -> "BandwidthModel":
+        """Calibration transfers through the *production* path: each size
+        does real swap-out/swap-in round trips via the engine.  This
+        prices exactly the copies the policy will later schedule — unlike
+        a raw ``device_put`` probe, which JAX may elide on CPU.  The
+        engine's per-copy EMA feed is bypassed during the sweep: per-size
+        *minima* of warm runs go into the curve — min is the standard
+        low-noise estimator for copy cost (the first round-trip per size
+        pays slab allocation and, globally, JAX dispatch initialization —
+        ~3 orders of magnitude of noise)."""
+        import numpy as np
+        sizes = sizes if sizes is not None else self.cfg.calibration_sizes
+        iters = iters if iters is not None else self.cfg.calibration_iters
+        eng = self.engine
+        saved, eng.bwmodel = eng.bwmodel, None
+        try:
+            warm = np.zeros(1024, np.uint8)      # init JAX + tiny slab class
+            eng.wait(eng.submit_swap_in(
+                eng.wait(eng.submit_swap_out(warm, "warm")), "warm"))
+            for size in sizes:
+                arr = np.zeros(size, np.uint8)
+                outs, ins = [], []
+                for i in range(max(iters, 1) + 1):
+                    ev = eng.wait(eng.submit_swap_out(arr, "calib"))
+                    ev2 = eng.wait(eng.submit_swap_in(ev, "calib"))
+                    if i:                        # drop the cold run
+                        outs.append(ev.seconds)
+                        ins.append(ev2.seconds)
+                self.bwmodel.observe(size, (min(outs) + min(ins)) / 2)
+        finally:
+            eng.bwmodel = saved
+        return self.bwmodel
+
+    def stats(self) -> dict:
+        return _metrics.collect(self)
+
+    def summary(self) -> str:
+        return _metrics.format_summary(self.stats())

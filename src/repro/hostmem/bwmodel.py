@@ -1,0 +1,123 @@
+"""Measured host-link bandwidth model (replaces the Eq. 3 constant).
+
+The paper's simulator prices every transfer at ``T = S / B`` with one
+scalar ``B`` (``ChameleonConfig.host_link_gbps``).  Real host links are
+nothing like that: small copies are latency-bound (fixed setup cost
+dominates), large copies approach asymptotic bandwidth, and the knee is
+platform-specific.  This model measures the actual curve:
+
+  * **calibration** runs a sweep of real H2D/D2H copies across sizes and
+    records the median time per size — a piecewise curve in log-size;
+  * **online observation** lets the transfer engine keep refreshing the
+    curve with an EMA as production swaps retire;
+  * :meth:`transfer_time` interpolates the curve log-log between measured
+    points, extends latency-flat below the smallest point and
+    bandwidth-flat above the largest;
+  * with **zero samples** it degrades to exactly the old constant —
+    ``nbytes / (host_link_gbps * 1e9)`` — so an uncalibrated system
+    behaves byte-for-byte like the paper baseline.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.common.config import HOSTMEM_CALIBRATION_SIZES
+
+# default calibration sweep: 64 KiB .. 64 MiB (the candidate-size range —
+# candidates below 64 KiB are filtered by §5.3's MIN_SWAP_BYTES anyway)
+CALIBRATION_SIZES: Tuple[int, ...] = HOSTMEM_CALIBRATION_SIZES
+EMA = 0.2                        # weight of a new online observation
+
+
+class BandwidthModel:
+    def __init__(self, constant_gbps: float = 32.0):
+        self.constant_gbps = constant_gbps
+        # log2-size bucket -> (representative size, ema seconds, n samples)
+        self._buckets: Dict[int, Tuple[int, float, int]] = {}
+        self._curve_cache: Optional[List[Tuple[int, float]]] = None
+
+    # ---------------------------------------------------------- sampling
+    def observe(self, nbytes: int, seconds: float) -> None:
+        if nbytes <= 0 or seconds <= 0:
+            return
+        b = int(math.log2(nbytes))
+        size, ema, n = self._buckets.get(b, (nbytes, seconds, 0))
+        ema = seconds if n == 0 else (1 - EMA) * ema + EMA * seconds
+        self._buckets[b] = (max(size, nbytes), ema, n + 1)
+        self._curve_cache = None
+
+    def calibrate(self, sizes: Sequence[int] = CALIBRATION_SIZES, *,
+                  iters: int = 3,
+                  device_put: Optional[Callable] = None) -> "BandwidthModel":
+        """Run real round-trip copies and take the per-size median."""
+        if device_put is None:
+            import jax
+            device_put = lambda a: jax.block_until_ready(jax.device_put(a))  # noqa: E731
+        for size in sizes:
+            host = np.empty(size, np.uint8)
+            ts = []
+            for _ in range(max(iters, 1)):
+                t0 = time.perf_counter()
+                dev = device_put(host)          # H2D
+                np.asarray(dev)                 # D2H readback
+                ts.append((time.perf_counter() - t0) / 2)   # per direction
+            ts.sort()
+            self.observe(size, ts[len(ts) // 2])
+        return self
+
+    # ------------------------------------------------------------- query
+    @property
+    def is_calibrated(self) -> bool:
+        return len(self._buckets) >= 2
+
+    def _curve(self) -> List[Tuple[int, float]]:
+        if self._curve_cache is None:
+            self._curve_cache = sorted(
+                (size, ema) for size, ema, _ in self._buckets.values())
+        return self._curve_cache
+
+    def transfer_time(self, nbytes: int) -> float:
+        """Seconds to move ``nbytes`` one way across the host link."""
+        if nbytes <= 0:
+            return 0.0
+        if not self.is_calibrated:
+            return nbytes / (self.constant_gbps * 1e9)      # Eq. 3 fallback
+        curve = self._curve()
+        lo_s, lo_t = curve[0]
+        hi_s, hi_t = curve[-1]
+        if nbytes <= lo_s:
+            return lo_t                    # latency floor below the sweep
+        if nbytes >= hi_s:
+            return hi_t * nbytes / hi_s    # asymptotic bandwidth above it
+        for (s0, t0), (s1, t1) in zip(curve, curve[1:]):
+            if s0 <= nbytes <= s1:
+                f = ((math.log(nbytes) - math.log(s0))
+                     / (math.log(s1) - math.log(s0)))
+                return math.exp((1 - f) * math.log(t0) + f * math.log(t1))
+        return nbytes / (self.constant_gbps * 1e9)          # unreachable
+
+    def bandwidth_gbps(self, nbytes: int) -> float:
+        t = self.transfer_time(nbytes)
+        return nbytes / t / 1e9 if t > 0 else self.constant_gbps
+
+    # ----------------------------------------------------- serialization
+    def curve(self) -> List[Tuple[int, float, float]]:
+        """[(size, seconds, effective GB/s)] — for reports and docs."""
+        return [(s, t, s / t / 1e9) for s, t in self._curve()]
+
+    def to_dict(self) -> dict:
+        return {"constant_gbps": self.constant_gbps,
+                "samples": [(s, t, n) for s, t, n in self._buckets.values()]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BandwidthModel":
+        m = cls(d.get("constant_gbps", 32.0))
+        for s, t, n in d.get("samples", []):
+            b = int(math.log2(s))
+            m._buckets[b] = (int(s), float(t), int(n))
+        m._curve_cache = None
+        return m

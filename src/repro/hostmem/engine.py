@@ -1,0 +1,187 @@
+"""Async transfer engine: queued swap-out / swap-in over the pinned pool.
+
+Models a dedicated copy stream pair (D2H + H2D) with a bounded number of
+in-flight transfers (``depth``, default 2 = double buffering).  Submission
+is non-blocking and returns a :class:`TransferEvent`; the copy itself runs
+when (a) the in-flight window overflows — submitting transfer *k+depth*
+forces transfer *k* to retire, exactly like recycling the front buffer of
+a double buffer — or (b) someone waits on the event.  Completion order is
+FIFO per direction, which is what a hardware copy stream guarantees.
+
+The **swap-out completion event is the memory release point**: the engine
+holds the device-array reference until the D2H copy retires and drops it
+there — the custom-``recordStream`` analogue from paper §5.4.2.  The
+policy's free-times map onto these events via :meth:`plan_release`, and
+the Fig-8 "reuse interval" is observable as ``event.release_op``.
+
+Every executed copy is timed and fed to the attached
+:class:`~repro.hostmem.bwmodel.BandwidthModel`, so steady-state traffic
+keeps the measured latency curve fresh for the simulator.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.hostmem.pool import HostBlock, PinnedSlabPool
+
+SWAP_OUT = "out"                 # device -> host
+SWAP_IN = "in"                   # host -> device
+
+
+@dataclass
+class TransferEvent:
+    eid: int
+    kind: str                    # SWAP_OUT | SWAP_IN
+    tag: str
+    nbytes: int
+    done: bool = False
+    seconds: float = 0.0         # measured copy time once done
+    block: Optional[HostBlock] = None   # staging slab (owned until swap-in)
+    result: Any = None           # device array (swap-in only)
+    release_op: int = -1         # policy-planned release point (§5.4.2)
+    _source: Any = field(default=None, repr=False)   # device ref held to done
+    _callbacks: List[Callable] = field(default_factory=list, repr=False)
+
+    def on_done(self, fn: Callable[["TransferEvent"], None]) -> None:
+        if self.done:
+            fn(self)
+        else:
+            self._callbacks.append(fn)
+
+
+class TransferEngine:
+    def __init__(self, pool: PinnedSlabPool, *, depth: int = 2,
+                 bwmodel=None, device_put: Optional[Callable] = None):
+        assert depth >= 1
+        self.pool = pool
+        self.depth = depth
+        self.bwmodel = bwmodel
+        self._device_put = device_put or self._default_device_put
+        self._pending: Dict[str, Deque[TransferEvent]] = {
+            SWAP_OUT: collections.deque(), SWAP_IN: collections.deque()}
+        self._eid = 0
+        self._planned_release: Dict[str, int] = {}
+        # ---- counters ----
+        self.n_out = self.n_in = 0
+        self.bytes_out = self.bytes_in = 0
+        self.time_out_s = self.time_in_s = 0.0
+        self.forced_retires = 0          # completions forced by a full window
+
+    @staticmethod
+    def _default_device_put(arr: np.ndarray):
+        import jax
+        # block: ev.seconds must measure the copy, not async dispatch
+        return jax.block_until_ready(jax.device_put(arr))
+
+    # --------------------------------------------------------- submission
+    def submit_swap_out(self, array, tag: str = "") -> TransferEvent:
+        """Queue a D2H copy of ``array`` into a recycled pool slab."""
+        nbytes = int(np.asarray(array).nbytes) if not hasattr(array, "nbytes") \
+            else int(array.nbytes)
+        self._eid += 1
+        ev = TransferEvent(self._eid, SWAP_OUT, tag, nbytes, _source=array)
+        ev.release_op = self._planned_release.get(tag, -1)
+        self._enqueue(ev)
+        return ev
+
+    def submit_swap_in(self, block_or_event, tag: str = "",
+                       free_block: bool = True) -> TransferEvent:
+        """Queue an H2D copy restoring a staged block to the device."""
+        blk = block_or_event.block if isinstance(block_or_event, TransferEvent) \
+            else block_or_event
+        if blk is None:
+            raise ValueError("swap-in requires a completed swap-out block")
+        self._eid += 1
+        ev = TransferEvent(self._eid, SWAP_IN, tag or blk.tag, blk.nbytes,
+                           block=blk)
+        ev._free_block = free_block
+        self._enqueue(ev)
+        return ev
+
+    def _enqueue(self, ev: TransferEvent) -> None:
+        q = self._pending[ev.kind]
+        q.append(ev)
+        while len(q) > self.depth:       # double-buffer window overflow
+            self.forced_retires += 1
+            self._execute(q.popleft())
+
+    # ---------------------------------------------------------- execution
+    def _execute(self, ev: TransferEvent) -> None:
+        t0 = time.perf_counter()
+        if ev.kind == SWAP_OUT:
+            ev.block = self.pool.alloc(ev.nbytes, tag=ev.tag)
+            ev.block.write(ev._source)
+            ev._source = None            # recordStream analogue: release here
+        else:
+            host = ev.block.read()
+            ev.result = self._device_put(host)
+            if getattr(ev, "_free_block", True):
+                self.pool.free(ev.block)
+        ev.seconds = time.perf_counter() - t0
+        ev.done = True
+        if ev.kind == SWAP_OUT:
+            self.n_out += 1
+            self.bytes_out += ev.nbytes
+            self.time_out_s += ev.seconds
+        else:
+            self.n_in += 1
+            self.bytes_in += ev.nbytes
+            self.time_in_s += ev.seconds
+        if self.bwmodel is not None:
+            self.bwmodel.observe(ev.nbytes, ev.seconds)
+        for fn in ev._callbacks:
+            fn(ev)
+        ev._callbacks.clear()
+
+    # ------------------------------------------------------------ waiting
+    def wait(self, ev: TransferEvent) -> TransferEvent:
+        """Retire transfers (FIFO) until ``ev`` completes."""
+        q = self._pending[ev.kind]
+        while not ev.done:
+            if not q:
+                raise RuntimeError(f"event {ev.eid} lost from queue")
+            self._execute(q.popleft())
+        return ev
+
+    def synchronize(self) -> None:
+        """Retire everything in flight, in global submission order."""
+        while self._pending[SWAP_OUT] or self._pending[SWAP_IN]:
+            heads = [q[0] for q in self._pending.values() if q]
+            nxt = min(heads, key=lambda e: e.eid)
+            self._execute(self._pending[nxt.kind].popleft())
+
+    @property
+    def in_flight(self) -> int:
+        return sum(len(q) for q in self._pending.values())
+
+    # --------------------------------------- policy free-time hand-off
+    def plan_release(self, tag: str, op_index: int) -> None:
+        """Record the op at which the simulator promised the D2H for ``tag``
+        retires (PolicyEntry.swap_out_done_op) — later swap-outs carry it."""
+        self._planned_release[tag] = op_index
+
+    def clear_planned_releases(self) -> None:
+        """Drop all planned release points (a new policy supersedes them)."""
+        self._planned_release.clear()
+
+    def planned_releases(self) -> Dict[str, int]:
+        return dict(self._planned_release)
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        tput = lambda b, s: b / s / 1e9 if s > 0 else 0.0   # noqa: E731
+        return {
+            "n_out": self.n_out, "n_in": self.n_in,
+            "bytes_out": self.bytes_out, "bytes_in": self.bytes_in,
+            "time_out_s": self.time_out_s, "time_in_s": self.time_in_s,
+            "gbps_out": tput(self.bytes_out, self.time_out_s),
+            "gbps_in": tput(self.bytes_in, self.time_in_s),
+            "in_flight": self.in_flight,
+            "forced_retires": self.forced_retires,
+            "planned_releases": len(self._planned_release),
+        }

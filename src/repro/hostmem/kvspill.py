@@ -1,0 +1,89 @@
+"""KV-cache spill/restore: park a decode slot's state in the host pool.
+
+A serving slot is one batch row of the model's ``DecodeState`` (stacked
+``(L, B, ...)`` arrays plus a ``pos`` scalar).  Spilling extracts row
+``slot`` of every populated field and stages it into recycled pinned
+slabs through the transfer engine; the HBM row is then free to be
+overwritten by a new request.  Restoring copies the staged rows back
+into (any) slot and resumes decoding exactly where the request left
+off — the Pie-style "CPU memory as cache extension" move (arXiv
+2411.09317), applied to continuous batching so admission can exceed
+HBM-resident slots.
+
+Round-trip is exact: slabs stage raw bytes, so restore reproduces the
+kv/conv/ssd rows bit-for-bit and decode continues deterministically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.hostmem.engine import TransferEngine, TransferEvent
+from repro.hostmem.pool import PinnedSlabPool
+
+STATE_FIELDS = ("attn_k", "attn_v", "ssm_conv", "ssm_ssd",
+                "cross_k", "cross_v")
+
+
+@dataclass
+class SpilledSlot:
+    """Host-resident image of one decode slot."""
+    tag: str
+    pos: int
+    events: Dict[str, TransferEvent] = field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(e.nbytes for e in self.events.values())
+
+
+class KVSpillManager:
+    def __init__(self, pool: PinnedSlabPool, engine: TransferEngine):
+        self.pool = pool
+        self.engine = engine
+        self.n_spills = self.n_restores = 0
+        self.bytes_spilled = self.bytes_restored = 0
+
+    # -------------------------------------------------------------- spill
+    def spill(self, state, slot: int, tag: str = "") -> SpilledSlot:
+        """Queue D2H copies of batch row ``slot`` of every state field."""
+        sp = SpilledSlot(tag, pos=int(state.pos[slot]))
+        for name in STATE_FIELDS:
+            arr = getattr(state, name, None)
+            if arr is None:
+                continue
+            ev = self.engine.submit_swap_out(arr[:, slot], f"{tag}/{name}")
+            sp.events[name] = ev
+        self.n_spills += 1
+        self.bytes_spilled += sp.nbytes
+        return sp
+
+    # ------------------------------------------------------------ restore
+    def restore(self, state, sp: SpilledSlot, slot: int):
+        """Swap a spilled slot image back into HBM row ``slot``."""
+        import jax.numpy as jnp
+        upd = {}
+        for name, ev_out in sp.events.items():
+            self.engine.wait(ev_out)                 # staging must retire
+            ev_in = self.engine.wait(
+                self.engine.submit_swap_in(ev_out, f"{sp.tag}/{name}"))
+            cur = getattr(state, name)
+            row = jnp.asarray(ev_in.result).astype(cur.dtype)
+            upd[name] = cur.at[:, slot].set(row)
+        upd["pos"] = state.pos.at[slot].set(sp.pos)
+        self.n_restores += 1
+        self.bytes_restored += sp.nbytes
+        return state._replace(**upd)
+
+    def discard(self, sp: SpilledSlot) -> None:
+        """Drop a spill image (request cancelled) — slabs go back to the
+        pool without an H2D copy."""
+        for ev in sp.events.values():
+            self.engine.wait(ev)
+            self.pool.free(ev.block)
+        sp.events.clear()
+
+    def stats(self) -> dict:
+        return {"n_spills": self.n_spills, "n_restores": self.n_restores,
+                "bytes_spilled": self.bytes_spilled,
+                "bytes_restored": self.bytes_restored}

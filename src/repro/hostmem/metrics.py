@@ -1,0 +1,47 @@
+"""Aggregated host-memory tier counters.
+
+One dict, stable keys, cheap to collect — surfaced through
+``ChameleonRuntime.stats()["hostmem"]`` and ``Server.stats()["hostmem"]``
+so dashboards and the benchmark read the same numbers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def collect(tier) -> dict:
+    """Snapshot every component of a :class:`~repro.hostmem.HostMemTier`."""
+    out = {
+        "pool": tier.pool.stats(),
+        "engine": tier.engine.stats(),
+        "bwmodel": {
+            "calibrated": tier.bwmodel.is_calibrated,
+            "constant_gbps": tier.bwmodel.constant_gbps,
+            "points": len(tier.bwmodel.curve()),
+        },
+    }
+    if tier.kvspill is not None:
+        out["kvspill"] = tier.kvspill.stats()
+    return out
+
+
+def format_summary(stats: dict) -> str:
+    p, e = stats["pool"], stats["engine"]
+    lines = [
+        f"pool: {p['bytes_in_use'] / 2**20:.1f} MiB live / "
+        f"{p['bytes_reserved'] / 2**20:.1f} MiB reserved, "
+        f"hit-rate {p['hit_rate']:.1%}, frag {p['fragmentation']:.1%}",
+        f"engine: {e['n_out']} out ({e['bytes_out'] / 2**20:.1f} MiB, "
+        f"{e['gbps_out']:.2f} GB/s), {e['n_in']} in "
+        f"({e['bytes_in'] / 2**20:.1f} MiB, {e['gbps_in']:.2f} GB/s)",
+    ]
+    bw = stats["bwmodel"]
+    lines.append("bwmodel: " + ("calibrated, %d points" % bw["points"]
+                                if bw["calibrated"] else
+                                "constant %.1f GB/s" % bw["constant_gbps"]))
+    if "kvspill" in stats:
+        k = stats["kvspill"]
+        lines.append(f"kvspill: {k['n_spills']} spills / "
+                     f"{k['n_restores']} restores, "
+                     f"{k['bytes_spilled'] / 2**20:.1f} MiB out")
+    return "\n".join(lines)

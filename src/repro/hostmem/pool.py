@@ -1,0 +1,172 @@
+"""Pinned-host slab pool (ProTrain-style chunked host memory, arXiv
+2406.08334 §4.1; Pie pooled CPU memory, arXiv 2411.09317).
+
+Host staging buffers are grabbed once, bucketed into power-of-two size
+classes, and recycled through per-class free lists so steady-state swap
+traffic performs **zero** fresh allocations: every swap-out lands in a
+recycled slab.  On CPU-only JAX the "pinned" property is modeled by
+page-aligned numpy slabs (an `over-allocate + offset` trick); on real
+backends the same free-list logic fronts `cudaHostAlloc`/TPU pinned
+arenas — only `_raw_slab` changes.
+
+Accounting invariants (enforced, property-tested):
+  * a byte is never double-booked — each slab is either on exactly one
+    free list or owned by exactly one live block;
+  * `free()` always returns the slab to its class free list;
+  * `bytes_in_use + bytes_free == bytes_reserved`.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PAGE = 4096                      # host page size used for alignment
+DEFAULT_MIN_CLASS = 1 << 12      # 4 KiB smallest slab class
+
+
+class HostMemError(RuntimeError):
+    """Pool misuse (double free / foreign block) or capacity exhaustion."""
+
+
+def size_class(nbytes: int, min_class: int = DEFAULT_MIN_CLASS) -> int:
+    """Round a request up to its power-of-two slab class."""
+    c = min_class
+    while c < nbytes:
+        c <<= 1
+    return c
+
+
+def _raw_slab(class_bytes: int) -> np.ndarray:
+    """Page-aligned uint8 slab — the pinned-allocation stand-in."""
+    buf = np.empty(class_bytes + PAGE, np.uint8)
+    off = (-buf.ctypes.data) % PAGE
+    return buf[off:off + class_bytes]
+
+
+@dataclass
+class HostBlock:
+    """A live reservation: ``data[:nbytes]`` is the caller's staging area."""
+    bid: int
+    nbytes: int                  # requested size
+    class_bytes: int             # slab class actually reserved
+    data: np.ndarray = field(repr=False)
+    tag: str = ""
+    freed: bool = False
+
+    def view(self) -> np.ndarray:
+        return self.data[: self.nbytes]
+
+    def write(self, arr) -> "HostBlock":
+        """Stage a host copy of ``arr`` (any dtype/shape) into the slab —
+        one copy: device->host via asarray, then a zero-copy byte view
+        into the slab assignment."""
+        src = np.ascontiguousarray(np.asarray(arr))
+        self.view()[:] = src.view(np.uint8).ravel()
+        self.shape, self.dtype = src.shape, src.dtype
+        return self
+
+    def read(self) -> np.ndarray:
+        """Recover the staged array (copy — the slab stays reusable)."""
+        return self.view().copy().view(self.dtype).reshape(self.shape)
+
+
+class PinnedSlabPool:
+    """Slab/free-list allocator with size-class bucketing and reuse stats."""
+
+    def __init__(self, capacity_bytes: Optional[int] = None,
+                 min_class_bytes: int = DEFAULT_MIN_CLASS):
+        self.capacity = capacity_bytes
+        self.min_class = min_class_bytes
+        self._free: Dict[int, List[np.ndarray]] = {}
+        self._live: Dict[int, HostBlock] = {}
+        self._ids = itertools.count()
+        # ---- stats ----
+        self.bytes_reserved = 0          # total slab bytes grabbed from host
+        self.bytes_in_use = 0            # requested bytes of live blocks
+        self.class_bytes_in_use = 0      # slab bytes of live blocks
+        self.peak_reserved = 0
+        self.alloc_count = 0
+        self.reuse_hits = 0              # allocs served from a free list
+        self.slab_allocs = 0             # allocs that created a fresh slab
+        self.free_count = 0
+
+    # ------------------------------------------------------------- alloc
+    def alloc(self, nbytes: int, tag: str = "") -> HostBlock:
+        if nbytes <= 0:
+            raise HostMemError(f"invalid allocation size {nbytes}")
+        cb = size_class(nbytes, self.min_class)
+        self.alloc_count += 1
+        bucket = self._free.get(cb)
+        if bucket:
+            slab = bucket.pop()
+            self.reuse_hits += 1
+        else:
+            if (self.capacity is not None
+                    and self.bytes_reserved + cb > self.capacity):
+                raise HostMemError(
+                    f"host pool exhausted: {self.bytes_reserved + cb} "
+                    f"> capacity {self.capacity}")
+            slab = _raw_slab(cb)
+            self.slab_allocs += 1
+            self.bytes_reserved += cb
+            self.peak_reserved = max(self.peak_reserved, self.bytes_reserved)
+        blk = HostBlock(next(self._ids), nbytes, cb, slab, tag)
+        self._live[blk.bid] = blk
+        self.bytes_in_use += nbytes
+        self.class_bytes_in_use += cb
+        return blk
+
+    def free(self, blk: HostBlock) -> None:
+        if blk.freed or blk.bid not in self._live:
+            raise HostMemError(f"double free / foreign block {blk.bid}")
+        del self._live[blk.bid]
+        blk.freed = True
+        self.bytes_in_use -= blk.nbytes
+        self.class_bytes_in_use -= blk.class_bytes
+        self._free.setdefault(blk.class_bytes, []).append(blk.data)
+        self.free_count += 1
+
+    # ------------------------------------------------------------- stats
+    @property
+    def bytes_free(self) -> int:
+        return sum(cb * len(v) for cb, v in self._free.items())
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of allocs served without touching the host allocator."""
+        return self.reuse_hits / self.alloc_count if self.alloc_count else 0.0
+
+    @property
+    def fragmentation(self) -> float:
+        """Internal fragmentation of live blocks: wasted / reserved-live."""
+        if not self.class_bytes_in_use:
+            return 0.0
+        return 1.0 - self.bytes_in_use / self.class_bytes_in_use
+
+    @property
+    def live_blocks(self) -> int:
+        return len(self._live)
+
+    def stats(self) -> dict:
+        return {
+            "bytes_reserved": self.bytes_reserved,
+            "bytes_in_use": self.bytes_in_use,
+            "bytes_free": self.bytes_free,
+            "peak_reserved": self.peak_reserved,
+            "live_blocks": self.live_blocks,
+            "alloc_count": self.alloc_count,
+            "reuse_hits": self.reuse_hits,
+            "slab_allocs": self.slab_allocs,
+            "free_count": self.free_count,
+            "hit_rate": self.hit_rate,
+            "fragmentation": self.fragmentation,
+        }
+
+    def check(self) -> None:
+        """Book-keeping invariant — used by tests and the benchmark."""
+        assert self.bytes_in_use == sum(b.nbytes for b in self._live.values())
+        assert (self.class_bytes_in_use + self.bytes_free
+                == self.bytes_reserved), "slab bytes leaked"

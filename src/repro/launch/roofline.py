@@ -291,6 +291,8 @@ def analyze(compiled, chips: int, model_flops: float = 0.0,
             hlo_text: Optional[str] = None,
             step_jaxpr=None) -> RooflineTerms:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # older JAX: one dict per program
+        cost = cost[0] if cost else {}
     txt = hlo_text if hlo_text is not None else compiled.as_text()
     colls = collective_bytes(txt)
     xla_flops = float(cost.get("flops", 0.0))

@@ -1,6 +1,10 @@
 """Serving entry point: batched decode over the slot server.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced
+
+Over-subscription: ``--max-active`` beyond ``--max-batch`` admits more
+concurrent requests than HBM-resident slots by spilling preempted decode
+state into the pinned host pool (repro.hostmem).
 """
 from __future__ import annotations
 
@@ -13,21 +17,35 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="HBM-resident decode slots")
+    ap.add_argument("--max-active", type=int, default=0,
+                    help="admitted concurrency (> max-batch spills KV state "
+                         "to the host pool; 0 = max-batch)")
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--calibrate-link", action="store_true",
+                    help="measure the host link before serving")
     args = ap.parse_args()
 
     import jax
     import numpy as np
     import repro.configs as C
+    from repro.hostmem import HostMemTier
     from repro.models.registry import get_api
     from repro.runtime.server import Server
 
     cfg = C.get_reduced(args.arch) if args.reduced else C.get_config(args.arch)
     api = get_api(cfg)
     params, _ = api.init(cfg, jax.random.PRNGKey(0))
-    srv = Server(cfg, params, max_batch=args.max_batch, max_len=args.max_len)
+    max_active = args.max_active or args.max_batch
+    hostmem = None
+    if max_active > args.max_batch or args.calibrate_link:
+        hostmem = HostMemTier()
+        if args.calibrate_link:
+            hostmem.calibrate()        # engine-path sweep, not raw device_put
+    srv = Server(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
+                 max_active=max_active, hostmem=hostmem)
     rng = np.random.RandomState(0)
     for _ in range(args.requests):
         srv.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)),
@@ -37,7 +55,10 @@ def main():
     dt = time.time() - t0
     toks = sum(len(v) for v in results.values())
     print(f"{len(results)} requests, {toks} tokens, {dt:.2f}s, "
-          f"{toks / dt:.1f} tok/s, {srv.ticks} ticks")
+          f"{toks / dt:.1f} tok/s, {srv.ticks} ticks, "
+          f"{srv.n_preemptions} preemptions")
+    if hostmem is not None:
+        print(hostmem.summary())
 
 
 if __name__ == "__main__":

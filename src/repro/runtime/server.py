@@ -4,6 +4,13 @@ Requests prefill into a free slot of the shared decode state (batch-dim
 scatter), then every ``tick()`` advances all active slots by one token.
 Completed slots free immediately and the admission queue backfills them —
 the standard continuous-batching loop, minimal but real.
+
+With a host-memory tier attached (``hostmem=HostMemTier()``), admission
+can exceed the HBM-resident slot count: ``max_active`` requests run
+concurrently over ``max_batch`` physical slots by parking preempted
+slots' decode state in the pinned host pool (``repro.hostmem.kvspill``)
+and rotating them back in round-robin.  Spill → restore is bit-exact, so
+a request decodes the same tokens whether or not it was ever parked.
 """
 from __future__ import annotations
 
@@ -28,21 +35,32 @@ class Request:
     generated: List[int] = field(default_factory=list)
     slot: int = -1
     done: bool = False
+    resident_since: int = 0        # tick at which it last entered a slot
+    n_spills: int = 0
 
 
 class Server:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_len: int = 512, memory=None):
+                 max_len: int = 512, memory=None,
+                 max_active: Optional[int] = None, hostmem=None,
+                 rotate_every: int = 1):
         assert cfg.family in ("dense", "moe", "ssm"), \
             "server prefill path covers dense/moe/ssm; others serve via decode-only"
         self.cfg, self.params = cfg, params
         self.api = get_api(cfg)
         self.max_batch, self.max_len = max_batch, max_len
+        self.max_active = max_active if max_active is not None else max_batch
+        if self.max_active > max_batch and hostmem is None:
+            from repro.hostmem import HostMemTier
+            hostmem = HostMemTier()      # over-subscription needs the tier
+        self.hostmem = hostmem
         self.memory = memory
         self.state = self.api.init_decode_state(cfg, max_batch, max_len,
                                                 memory=memory, params=params)
         self.free_slots = list(range(max_batch))
-        self.active: Dict[int, Request] = {}
+        self.active: Dict[int, Request] = {}       # resident in an HBM slot
+        self.spilled: Dict[int, Request] = {}      # parked in the host pool
+        self._spill_images: Dict[int, object] = {} # rid -> SpilledSlot
         self.completed: Dict[int, Request] = {}
         self.queue: collections.deque = collections.deque()
         self._rid = 0
@@ -52,6 +70,11 @@ class Server:
         self._prefill = jax.jit(
             lambda p, toks: T.prefill(cfg, p, toks, max_len))
         self.ticks = 0
+        self.n_preemptions = 0
+        # rotation quantum: swap a parked request in every k-th tick.  1 =
+        # strictest fairness; larger k trades waiter latency for k-fold
+        # fewer spill round trips per generated token.
+        self.rotate_every = max(rotate_every, 1)
 
     # ----------------------------------------------------------- admission
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -62,18 +85,37 @@ class Server:
         self._admit()
         return self._rid
 
+    @property
+    def n_active(self) -> int:
+        """Concurrently admitted requests (resident + host-parked)."""
+        return len(self.active) + len(self.spilled)
+
     def _admit(self):
-        while self.queue and self.free_slots:
+        self._restore_waiting()
+        while self.queue and self.n_active < self.max_active:
+            slot = self._acquire_slot()
+            if slot is None:
+                break
             req = self.queue.popleft()
-            slot = self.free_slots.pop()
-            req.slot = slot
-            logits, pstate = self._prefill(self.params, req.prompt[None, :])
-            # scatter single-request prefill state into the shared slots
-            self.state = self._write_slot(self.state, pstate, slot,
-                                          len(req.prompt))
-            first = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(first)
-            self.active[req.rid] = req
+            self._place(req, slot)
+
+    def _acquire_slot(self) -> Optional[int]:
+        if self.free_slots:
+            return self.free_slots.pop()
+        if self.hostmem is not None and self.active:
+            return self._preempt()
+        return None
+
+    def _place(self, req: Request, slot: int) -> None:
+        req.slot = slot
+        req.resident_since = self.ticks
+        logits, pstate = self._prefill(self.params, req.prompt[None, :])
+        # scatter single-request prefill state into the shared slots
+        self.state = self._write_slot(self.state, pstate, slot,
+                                      len(req.prompt))
+        first = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(first)
+        self.active[req.rid] = req
 
     def _write_slot(self, state, pstate, slot: int, plen: int):
         upd = {}
@@ -90,9 +132,51 @@ class Server:
                 upd[name] = cur.at[:, slot].set(new[:, 0].astype(cur.dtype))
         return type(state)(**upd)
 
+    # ------------------------------------------------------- kv-cache spill
+    def _preempt(self) -> int:
+        """Park the longest-resident request's slot state in the host pool
+        and hand its HBM slot to the caller."""
+        victim = min(self.active.values(),
+                     key=lambda r: (r.resident_since, r.rid))
+        del self.active[victim.rid]
+        self._spill_images[victim.rid] = self.hostmem.kvspill.spill(
+            self.state, victim.slot, tag=f"req{victim.rid}")
+        slot, victim.slot = victim.slot, -1
+        victim.n_spills += 1
+        self.spilled[victim.rid] = victim
+        self.n_preemptions += 1
+        return slot
+
+    def _restore_one(self, req: Request, slot: int) -> None:
+        sp = self._spill_images.pop(req.rid)
+        del self.spilled[req.rid]
+        self.state = self.hostmem.kvspill.restore(self.state, sp, slot)
+        req.slot = slot
+        req.resident_since = self.ticks
+        self.active[req.rid] = req
+
+    def _restore_waiting(self) -> None:
+        """Oldest parked requests take any free slots before new admission."""
+        while self.free_slots and self.spilled:
+            req = min(self.spilled.values(), key=lambda r: r.rid)
+            self._restore_one(req, self.free_slots.pop())
+
+    def _rotate(self) -> None:
+        """Round-robin: one parked request trades places with the
+        longest-resident slot every ``rotate_every`` ticks, so nobody
+        starves."""
+        if not self.spilled or self.hostmem is None or not self.active:
+            return
+        if self.ticks % self.rotate_every:
+            return
+        waiter = min(self.spilled.values(), key=lambda r: r.rid)
+        slot = self._preempt()
+        self._restore_one(waiter, slot)
+
     # ---------------------------------------------------------------- tick
     def tick(self) -> Dict[int, int]:
-        """Advance all active slots one token; returns {rid: token}."""
+        """Advance all resident slots one token; returns {rid: token}."""
+        self._admit()
         if not self.active:
             return {}
         tokens = np.zeros((self.max_batch, 1), np.int32)
@@ -115,13 +199,26 @@ class Server:
             req = self.active.pop(rid)
             self.completed[rid] = req
             self.free_slots.append(req.slot)
-        self._admit()
         self.ticks += 1
+        self._admit()
+        self._rotate()
         return out
 
     def run_until_done(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
         for _ in range(max_ticks):
-            if not self.active and not self.queue:
+            if not self.active and not self.queue and not self.spilled:
                 break
             self.tick()
         return {rid: req.generated for rid, req in self.completed.items()}
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "active": len(self.active),
+            "spilled": len(self.spilled),
+            "queued": len(self.queue),
+            "completed": len(self.completed),
+            "preemptions": self.n_preemptions,
+            "hostmem": self.hostmem.stats() if self.hostmem else None,
+        }

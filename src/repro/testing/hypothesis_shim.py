@@ -1,0 +1,190 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface
+this repo's property tests use.
+
+The real package is a dev dependency (see pyproject.toml); hermetic
+environments without it would otherwise fail test *collection*.  When
+:func:`install` runs (from ``tests/conftest.py``, only if the genuine
+package is absent), ``import hypothesis`` resolves here and the property
+tests run as seeded random sweeps: ``@given`` draws ``max_examples``
+pseudo-random examples from a fixed-seed RNG — deterministic across
+runs, no shrinking, same assertion surface.
+
+Supported subset: ``given``, ``settings`` (``max_examples`` honored,
+``deadline`` ignored), ``strategies.integers/floats/booleans/
+sampled_from/lists/composite``.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+from typing import Any, Callable, List, Sequence
+
+_SEED = 0
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+# --------------------------------------------------------------- strategies
+class SearchStrategy:
+    def do_draw(self, rnd: random.Random) -> Any:
+        raise NotImplementedError
+
+    def map(self, fn: Callable) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def do_draw(self, rnd):
+        return self.fn(self.base.do_draw(rnd))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(1 << 30) if min_value is None else min_value
+        self.hi = (1 << 30) if max_value is None else max_value
+
+    def do_draw(self, rnd):
+        # bias toward the boundaries, like real hypothesis
+        r = rnd.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return rnd.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None, **_kw):
+        self.lo = 0.0 if min_value is None else min_value
+        self.hi = 1.0 if max_value is None else max_value
+
+    def do_draw(self, rnd):
+        return self.lo + (self.hi - self.lo) * rnd.random()
+
+
+class _Booleans(SearchStrategy):
+    def do_draw(self, rnd):
+        return rnd.random() < 0.5
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence):
+        self.elements = list(elements)
+
+    def do_draw(self, rnd):
+        return rnd.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size=0, max_size=None,
+                 **_kw):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def do_draw(self, rnd):
+        n = rnd.randint(self.min_size, self.max_size)
+        return [self.elements.do_draw(rnd) for _ in range(n)]
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def do_draw(self, rnd):
+        def draw(strategy: SearchStrategy):
+            return strategy.do_draw(rnd)
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn: Callable) -> Callable:
+    @functools.wraps(fn)
+    def make(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+    return make
+
+
+# ------------------------------------------------------------- given/settings
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: SearchStrategy):
+    def deco(fn):
+        n = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            _run(fn, strategies, n, fixture_args, fixture_kwargs)
+
+        # drawn values fill the LAST len(strategies) params; anything before
+        # them is a pytest fixture and must stay visible in the signature
+        import inspect
+        sig = inspect.signature(fn)
+        keep = list(sig.parameters.values())[: len(sig.parameters)
+                                             - len(strategies)]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        del wrapper.__wrapped__           # stop pytest unwrapping to fn
+        wrapper._shim_max_examples = n
+        return wrapper
+    return deco
+
+
+def _run(fn, strategies, n, fixture_args, fixture_kwargs):
+    rnd = random.Random(_SEED)
+    for i in range(n):
+        drawn = [s.do_draw(rnd) for s in strategies]
+        try:
+            fn(*fixture_args, *drawn, **fixture_kwargs)
+        except _Unsatisfied:
+            continue
+        except Exception as e:
+            raise AssertionError(
+                f"property failed on shim example {i}: {drawn!r}") from e
+
+
+class HealthCheck:           # referenced by suppress_health_check= kwargs
+    all = classmethod(lambda cls: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+# ------------------------------------------------------------------ install
+def install() -> None:
+    """Register this shim as ``hypothesis`` / ``hypothesis.strategies``
+    in ``sys.modules`` (no-op if the real package ever got there first)."""
+    if "hypothesis" in sys.modules:
+        return
+    import importlib.machinery
+    hyp = types.ModuleType("hypothesis")
+    hyp.__spec__ = importlib.machinery.ModuleSpec("hypothesis", None)
+    hyp.given, hyp.settings, hyp.assume = given, settings, assume
+    hyp.HealthCheck = HealthCheck
+    hyp.__shim__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _Integers
+    st.floats = _Floats
+    st.booleans = _Booleans
+    st.sampled_from = _SampledFrom
+    st.lists = _Lists
+    st.composite = composite
+    st.SearchStrategy = SearchStrategy
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

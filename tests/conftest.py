@@ -10,6 +10,14 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# hermetic environments may lack the hypothesis dev dependency — fall back
+# to the seeded-sweep shim so property tests still collect and run
+import importlib.util  # noqa: E402
+if ("hypothesis" not in sys.modules
+        and importlib.util.find_spec("hypothesis") is None):
+    from repro.testing import hypothesis_shim  # noqa: E402
+    hypothesis_shim.install()
+
 import repro.configs as C  # noqa: E402
 from repro.common.config import ChameleonConfig  # noqa: E402
 from repro.models.registry import get_api  # noqa: E402

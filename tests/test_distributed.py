@@ -102,17 +102,17 @@ def test_compressed_grad_sync_int8_on_wire():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import make_compressed_grad_sync
+from repro.distributed.sharding import shard_map
 from repro.launch.mesh import make_test_mesh
 
-mesh = jax.make_mesh((4, 2), ('pod', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_test_mesh((4, 2), ('pod', 'model'))
 sync = make_compressed_grad_sync(mesh, 'pod')
 
 def f(g, e):
     return sync({'w': g}, {'w': e})
 
-sm = jax.shard_map(f, mesh=mesh, in_specs=(P('pod', None), P('pod', None)),
-                   out_specs=(P('pod', None), P('pod', None)))
+sm = shard_map(f, mesh=mesh, in_specs=(P('pod', None), P('pod', None)),
+               out_specs=(P('pod', None), P('pod', None)))
 g = jnp.asarray(np.random.RandomState(0).randn(8, 64), jnp.float32)
 e = jnp.zeros_like(g)
 jf = jax.jit(sm)

@@ -1,0 +1,258 @@
+"""Host-memory tier: pool alloc/free/reuse, engine completion ordering,
+bandwidth-model curve, and the simulator's calibrated pricing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import ChameleonConfig, HostMemConfig
+from repro.hostmem import (BandwidthModel, HostMemError, HostMemTier,
+                           PinnedSlabPool, TransferEngine)
+from repro.hostmem.pool import size_class
+
+
+# ------------------------------------------------------------------- pool
+def test_pool_alloc_free_reuse():
+    p = PinnedSlabPool()
+    a = p.alloc(1000)
+    assert a.class_bytes == size_class(1000) and a.nbytes == 1000
+    p.free(a)
+    b = p.alloc(700)                     # same 4 KiB class -> recycled slab
+    assert b.class_bytes == a.class_bytes
+    assert p.reuse_hits == 1 and p.slab_allocs == 1
+    assert p.bytes_reserved == a.class_bytes
+    p.check()
+
+
+def test_pool_double_free_rejected():
+    p = PinnedSlabPool()
+    blk = p.alloc(64)
+    p.free(blk)
+    with pytest.raises(HostMemError):
+        p.free(blk)
+
+
+def test_pool_capacity_cap():
+    p = PinnedSlabPool(capacity_bytes=1 << 14)
+    p.alloc(1 << 13)
+    with pytest.raises(HostMemError):
+        p.alloc(1 << 14)                 # would exceed the cap
+    # but a class that fits the remaining budget still succeeds
+    p.alloc(1 << 12)
+
+
+def test_pool_steady_state_zero_fresh_allocation():
+    """After the first step touches every size, later steps are all hits."""
+    p = PinnedSlabPool()
+    sizes = [3 << 10, 70 << 10, 1 << 20, 5 << 20]
+    for step in range(20):
+        blocks = [p.alloc(s) for s in sizes]
+        for b in blocks:
+            p.free(b)
+        if step == 0:
+            fresh_after_warmup = p.slab_allocs
+    assert p.slab_allocs == fresh_after_warmup   # zero fresh allocs later
+    assert p.hit_rate > 0.9
+    p.check()
+
+
+def test_block_roundtrip_preserves_bits():
+    p = PinnedSlabPool()
+    arr = np.random.RandomState(0).randn(33, 7).astype(np.float32)
+    blk = p.alloc(arr.nbytes).write(arr)
+    out = blk.read()
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+@given(st.lists(st.integers(1, 1 << 20), min_size=1, max_size=60),
+       st.lists(st.integers(0, 1 << 30), min_size=0, max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_pool_never_double_books(sizes, free_picks):
+    """Property: live bytes are exact, slab bytes never leak, every free
+    returns the slab to a free list, and no two live blocks share a slab."""
+    p = PinnedSlabPool()
+    live = []
+    picks = iter(free_picks)
+    for s in sizes:
+        live.append(p.alloc(s))
+        k = next(picks, None)
+        if k is not None and live and k % 3 == 0:    # interleave frees
+            p.free(live.pop(k % len(live)))
+    addrs = [b.data.ctypes.data for b in live]
+    assert len(addrs) == len(set(addrs)), "two live blocks share a slab"
+    assert p.bytes_in_use == sum(b.nbytes for b in live)
+    p.check()
+    n_free_before = sum(len(v) for v in p._free.values())
+    for b in list(live):
+        p.free(b)
+    assert p.bytes_in_use == 0 and p.live_blocks == 0
+    assert (sum(len(v) for v in p._free.values())
+            == n_free_before + len(live)), "free didn't return to free list"
+    p.check()
+
+
+# ----------------------------------------------------------------- engine
+def test_engine_fifo_completion_and_double_buffer():
+    tier = HostMemTier(HostMemConfig(engine_depth=2))
+    eng = tier.engine
+    arrs = [np.full(256, i, np.float32) for i in range(5)]
+    evs = [eng.submit_swap_out(a, f"t{i}") for i, a in enumerate(arrs)]
+    # depth=2 window: submitting 5 forces the first 3 to retire, in order
+    assert [e.done for e in evs] == [True, True, True, False, False]
+    assert eng.forced_retires == 3
+    eng.wait(evs[3])
+    assert evs[3].done and not evs[4].done
+    eng.synchronize()
+    assert all(e.done for e in evs)
+    # staged bytes round-trip through swap-in, FIFO again
+    back = [eng.wait(eng.submit_swap_in(e)) for e in evs]
+    for a, ev in zip(arrs, back):
+        np.testing.assert_array_equal(np.asarray(ev.result), a)
+    assert eng.n_out == 5 and eng.n_in == 5
+
+
+def test_engine_release_point_drops_device_ref():
+    tier = HostMemTier()
+    eng = tier.engine
+    a = np.ones(1024, np.float32)
+    ev = eng.submit_swap_out(a, "resid")
+    assert ev._source is a               # held until the copy retires
+    eng.wait(ev)
+    assert ev._source is None            # recordStream analogue: released
+
+
+def test_engine_planned_release_tags():
+    tier = HostMemTier()
+    tier.engine.plan_release("ffn_pre:3:17", 412)
+    ev = tier.engine.submit_swap_out(np.zeros(64, np.uint8), "ffn_pre:3:17")
+    assert ev.release_op == 412
+
+
+def test_engine_completion_callbacks_order():
+    tier = HostMemTier(HostMemConfig(engine_depth=1))
+    order = []
+    for i in range(4):
+        ev = tier.engine.submit_swap_out(np.zeros(128, np.uint8), f"t{i}")
+        ev.on_done(lambda e: order.append(e.tag))
+    tier.engine.synchronize()
+    assert order == ["t0", "t1", "t2", "t3"]
+
+
+# ---------------------------------------------------------------- bwmodel
+def test_bwmodel_uncalibrated_equals_constant():
+    m = BandwidthModel(32.0)
+    assert not m.is_calibrated
+    assert m.transfer_time(1 << 30) == pytest.approx((1 << 30) / 32e9)
+
+
+def test_bwmodel_curve_interpolation():
+    m = BandwidthModel(32.0)
+    m.observe(1 << 16, 1e-4)             # latency-bound point
+    m.observe(1 << 26, 4e-3)             # bandwidth-bound point
+    assert m.is_calibrated
+    assert m.transfer_time(1 << 10) == pytest.approx(1e-4)   # latency floor
+    t_mid = m.transfer_time(1 << 21)     # geometric midpoint in log-size
+    assert 1e-4 < t_mid < 4e-3
+    # above the sweep: scales linearly with the top point's bandwidth
+    assert m.transfer_time(1 << 27) == pytest.approx(8e-3)
+    # monotone over the measured range
+    ts = [m.transfer_time(1 << p) for p in range(16, 27)]
+    assert all(a <= b + 1e-12 for a, b in zip(ts, ts[1:]))
+
+
+def test_bwmodel_roundtrip_serialization():
+    m = BandwidthModel(24.0)
+    m.observe(1 << 16, 2e-4)
+    m.observe(1 << 20, 5e-4)
+    m2 = BandwidthModel.from_dict(m.to_dict())
+    assert m2.is_calibrated
+    assert m2.transfer_time(1 << 18) == pytest.approx(m.transfer_time(1 << 18))
+
+
+def test_engine_observations_feed_bwmodel():
+    tier = HostMemTier()
+    assert not tier.bwmodel.is_calibrated
+    for sz in (1 << 16, 1 << 20, 1 << 22):
+        tier.engine.wait(tier.engine.submit_swap_out(np.zeros(sz, np.uint8)))
+    assert tier.bwmodel.is_calibrated    # online samples calibrated it
+
+
+# ------------------------------------------- simulator consumes the curve
+def _toy_profile():
+    from repro.core.profiler import ProfileData, TensorInstance
+    tensors = [TensorInstance(i, 1 << 20, i, 100 - i, site="ffn_pre",
+                              layer=i) for i in range(10)]
+    return ProfileData(np.zeros(100, np.int32), tensors, 1.0, 0)
+
+
+def test_simulator_prices_with_calibrated_curve():
+    from repro.core.simulator import Simulator
+    prof = _toy_profile()
+    cfg = ChameleonConfig(groups_per_phase=8)
+    # measured curve says the link is 100x slower than the constant claims
+    bw = BandwidthModel(cfg.host_link_gbps)
+    slow = 100 * (1 << 20) / (cfg.host_link_gbps * 1e9)
+    bw.observe(1 << 16, slow / 16)
+    bw.observe(1 << 20, slow)
+    sim_const = Simulator(prof, 50, cfg)
+    sim_meas = Simulator(prof, 50, cfg, bwmodel=bw)
+    t_const, t_meas = sim_const.t_swap(1 << 20), sim_meas.t_swap(1 << 20)
+    assert t_meas == pytest.approx(slow)
+    assert t_meas > 50 * t_const
+    # uncalibrated model falls back to the constant exactly
+    sim_fallback = Simulator(prof, 50, cfg, bwmodel=BandwidthModel(
+        cfg.host_link_gbps))
+    assert sim_fallback.t_swap(1 << 20) == pytest.approx(t_const)
+
+
+def test_policy_free_time_handoff(llama_profile):
+    from repro.core.memtrace import build_timeline
+    from repro.core.policy import generate_policy
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    tier = HostMemTier()
+    pol = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                          int(tl.peak * 0.7), timeline=tl,
+                          engine=tier.engine)
+    assert pol.entries
+    planned = tier.engine.planned_releases()
+    assert len(planned) == len(pol.entries)
+    for e in pol.entries:
+        assert planned[pol.entry_tag(e)] == e.swap_out_done_op
+        assert e.swap_out_done_op >= 0
+
+
+def test_runtime_handoff_on_best_variant(llama_profile):
+    """Only the *winning* GenPolicy variant's free-times reach the engine;
+    losing variants must not leave stale release points behind."""
+    from repro.core.memtrace import build_timeline
+    from repro.core.policy import generate_policy
+    from repro.core.runtime import ChameleonRuntime, PolicyVariant
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    rt = ChameleonRuntime(ChameleonConfig(), lambda pol: (lambda x: x))
+    win = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                          int(tl.peak * 0.7), timeline=tl)
+    lose = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                           int(tl.peak * 0.75), timeline=tl)
+    applied = rt.executor.baseline()
+    rt.variants = [PolicyVariant(applied, lose, 0.5, measured_t=2.0),
+                   PolicyVariant(applied, win, 1.0, measured_t=1.0)]
+    rt._select_best()
+    assert rt.best.swap is win
+    planned = rt.hostmem.engine.planned_releases()
+    assert len(planned) == len(win.entries)
+    for e in win.entries:
+        assert planned[win.entry_tag(e)] == e.swap_out_done_op
+
+
+def test_runtime_stats_surface_hostmem():
+    from repro.core.runtime import ChameleonRuntime
+    rt = ChameleonRuntime(ChameleonConfig(), lambda pol: (lambda x: x))
+    s = rt.stats()
+    assert s["hostmem"] is not None
+    assert set(s["hostmem"]) >= {"pool", "engine", "bwmodel"}
+    rt2 = ChameleonRuntime(
+        ChameleonConfig(hostmem=HostMemConfig(enabled=False)),
+        lambda pol: (lambda x: x))
+    assert rt2.stats()["hostmem"] is None
