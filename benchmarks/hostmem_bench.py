@@ -1,7 +1,8 @@
 """Host-memory tier benchmark: pool reuse under steady-state swap churn,
-and measured-curve vs constant-bandwidth transfer-time prediction error.
+measured-curve vs constant-bandwidth transfer-time prediction error, and
+policy-swap latency under a concurrent checkpoint drain.
 
-Two claims the hostmem subsystem makes, measured:
+Claims the hostmem subsystem makes, measured:
 
   * the slab pool amortizes host allocation — after the first training
     step touches each size class, the steady-state hit rate must be
@@ -10,7 +11,12 @@ Two claims the hostmem subsystem makes, measured:
     times far better than the single ``host_link_gbps`` constant,
     especially in the latency-bound small-size regime the constant
     cannot represent.  We calibrate on even powers of two and evaluate
-    on the held-out odd powers.
+    on the held-out odd powers;
+  * the prioritized per-traffic-class streams keep a policy swap's
+    completion latency low even when a bulk checkpoint drain is queued:
+    on a single shared queue the swap waits behind the whole drain
+    (FIFO), on the class streams it preempts the drain at transfer
+    granularity.  The multi-stream latency must be strictly better.
 """
 from __future__ import annotations
 
@@ -19,7 +25,9 @@ import time
 import numpy as np
 
 from benchmarks.common import Row, time_call
-from repro.hostmem import BandwidthModel, HostMemTier
+from repro.common.config import HostMemConfig
+from repro.hostmem import (BandwidthModel, HostMemTier, TC_CHECKPOINT,
+                           TC_POLICY_SWAP)
 from repro.hostmem.pool import PinnedSlabPool
 
 
@@ -107,7 +115,87 @@ def _engine_throughput(iters: int) -> Row:
             f"pool_hit_rate={tier.pool.hit_rate:.3f}")
 
 
+# --------------------------- policy-swap latency under checkpoint drain
+_DRAIN_TRANSFERS = 8
+_DRAIN_BYTES = 8 << 20                  # 8 x 8 MiB queued checkpoint drain
+_SWAP_BYTES = 1 << 20                   # the latency-critical policy swap
+
+
+def _swap_latency(ckpt_class: str, iters: int) -> float:
+    """Queue a full checkpoint drain, then submit one policy swap and
+    measure its wait-to-completion.  ``ckpt_class`` selects the baseline
+    (drain shares the policy_swap queue = old single-queue engine) or the
+    split-stream engine (drain on the checkpoint class)."""
+    best = None
+    for _ in range(max(iters, 3)):
+        tier = HostMemTier(HostMemConfig(
+            engine_depth=2,
+            class_depths=(("policy_swap", _DRAIN_TRANSFERS + 2),
+                          ("checkpoint", _DRAIN_TRANSFERS + 2))))
+        eng = tier.engine
+        drain = np.zeros(_DRAIN_BYTES, np.uint8)
+        swap = np.zeros(_SWAP_BYTES, np.uint8)
+        # warm the slab classes so neither scenario pays first-touch allocs
+        for arr, cls in ((drain, ckpt_class), (swap, TC_POLICY_SWAP)):
+            ev = eng.submit_swap_out(arr, "warm", cls=cls)
+            eng.wait(ev)
+            tier.pool.free(ev.block)
+        for i in range(_DRAIN_TRANSFERS):
+            eng.submit_swap_out(drain, f"ckpt{i}", cls=ckpt_class)
+        ev = eng.submit_swap_out(swap, "policy", cls=TC_POLICY_SWAP)
+        t0 = time.perf_counter()
+        eng.wait(ev)                     # FIFO drains first iff same class
+        dt = time.perf_counter() - t0
+        eng.synchronize()
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def _swap_under_checkpoint_drain(iters: int) -> Row:
+    single = _swap_latency(TC_POLICY_SWAP, iters)   # shared-queue baseline
+    multi = _swap_latency(TC_CHECKPOINT, iters)     # split class streams
+    assert multi < single, \
+        f"class streams must beat the single queue: {multi} >= {single}"
+    return ("hostmem_engine.swap_latency_under_ckpt_drain", multi,
+            f"single_q_ms={single * 1e3:.2f} multi_q_ms={multi * 1e3:.2f} "
+            f"speedup={single / max(multi, 1e-9):.1f}x "
+            f"drain={_DRAIN_TRANSFERS}x{_DRAIN_BYTES >> 20}MiB")
+
+
+def _per_class_stats(iters: int) -> Row:
+    """Mixed traffic through one engine: per-class counters must separate
+    the flows and account checkpoint stall behind higher classes."""
+    tier = HostMemTier(HostMemConfig(
+        class_depths=(("checkpoint", _DRAIN_TRANSFERS + 2),)))
+    eng = tier.engine
+    drain = np.zeros(_DRAIN_BYTES, np.uint8)
+    swap = np.zeros(_SWAP_BYTES, np.uint8)
+    t0 = time.perf_counter()
+    for _ in range(max(iters, 3)):
+        evs = [eng.submit_swap_out(drain, "ck", cls=TC_CHECKPOINT)
+               for _ in range(4)]
+        pol = eng.submit_swap_out(swap, "pol", cls=TC_POLICY_SWAP)
+        eng.wait(evs[0])             # the policy swap preempts the drain
+        assert pol.done, "strict priority must run the swap first"
+        for ev in evs[1:]:
+            eng.wait(ev)
+        for ev in evs:
+            tier.pool.free(ev.block)
+        tier.pool.free(pol.block)
+    dt = time.perf_counter() - t0
+    cs = eng.stats()["classes"]
+    pol_c, ck_c = cs["policy_swap"], cs["checkpoint"]
+    tier.pool.check()
+    return ("hostmem_engine.per_class_stats", dt / max(iters, 3),
+            f"policy_out={pol_c['n_out']} ckpt_out={ck_c['n_out']} "
+            f"ckpt_stall_ms={ck_c['stall_s'] * 1e3:.2f} "
+            f"ckpt_waits={ck_c['stall_transfers']} "
+            f"pool_hit_rate={tier.pool.hit_rate:.3f}")
+
+
 def run(iters: int = 3):
     return [_pool_steady_state(),
             _prediction_error(iters),
-            _engine_throughput(iters)]
+            _engine_throughput(iters),
+            _swap_under_checkpoint_drain(iters),
+            _per_class_stats(iters)]

@@ -12,7 +12,13 @@ Design targets (1000+-node posture):
     re-``device_put``s against *any* new mesh/sharding, so the job can come
     back on a different topology (elastic scaling / failed-node exclusion);
   * **emergency saves** — the trainer calls ``save(..., block=True)`` from
-    its failure handler.
+    its failure handler;
+  * **host-memory tier integration** — with a ``repro.hostmem`` transfer
+    engine attached, snapshot staging routes through the engine's
+    ``checkpoint`` traffic class: the drain queues on the lowest-priority
+    stream, so concurrent policy swaps and KV spills preempt it at
+    transfer granularity instead of stalling behind it, and the staged
+    bytes recycle through the pinned slab pool.
 """
 from __future__ import annotations
 
@@ -44,14 +50,47 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3,
-                 process_index: Optional[int] = None):
+                 process_index: Optional[int] = None, engine=None):
         self.dir = directory
         self.keep = keep
         self.proc = (jax.process_index() if process_index is None
                      else process_index)
         os.makedirs(directory, exist_ok=True)
+        # optional repro.hostmem TransferEngine: snapshot staging goes
+        # through its lowest-priority "checkpoint" traffic class
+        self.engine = engine
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+
+    # -------------------------------------------------- engine staging
+    def _stage(self, name: str, flat: Dict[str, np.ndarray]):
+        """Queue every array on the checkpoint-class D2H stream; the
+        writer thread collects the staged bytes later (the engine lock
+        makes the cross-thread drain safe).  save() widens the class
+        window to the whole drain first, so nothing executes inline in
+        the training thread and every copy stays preemptible."""
+        from repro.hostmem.engine import TC_CHECKPOINT
+        staged = {}
+        for key, arr in flat.items():
+            if arr.nbytes == 0:           # pool rejects empty reservations
+                staged[key] = arr
+                continue
+            staged[key] = self.engine.submit_swap_out(
+                arr, tag=f"ckpt/{name}/{key}", cls=TC_CHECKPOINT)
+        return staged
+
+    def _collect(self, staged: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Drain the staged events back to plain arrays (writer side) and
+        recycle their slabs."""
+        out = {}
+        for key, ev in staged.items():
+            if isinstance(ev, np.ndarray):
+                out[key] = ev
+                continue
+            self.engine.wait(ev)
+            out[key] = ev.block.read()
+            self.engine.pool.free(ev.block)
+        return out
 
     # ---------------------------------------------------------------- save
     def save(self, step: int, trees: Dict[str, Any],
@@ -60,6 +99,15 @@ class CheckpointManager:
         self.wait()
         snap = {name: _flatten(tree) for name, tree in trees.items()
                 if tree is not None}
+        if self.engine is not None:
+            from repro.hostmem.engine import TC_CHECKPOINT
+            # widen the class window to the whole drain so no copy is
+            # forced inline here — the writer thread drains them all
+            self.engine.set_class_depth(
+                TC_CHECKPOINT,
+                sum(len(flat) for flat in snap.values()) + 2)
+            snap = {name: self._stage(name, flat)
+                    for name, flat in snap.items()}
         extra = dict(extra or {})
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + f".tmp.{self.proc}"
@@ -71,6 +119,8 @@ class CheckpointManager:
                             "process_count": jax.process_count(),
                             "extra": extra, "trees": {}}
                 for name, flat in snap.items():
+                    if self.engine is not None:
+                        flat = self._collect(flat)
                     fname = f"{name}.p{self.proc}.npz"
                     path = os.path.join(tmp, fname)
                     np.savez(path, **flat)
@@ -91,6 +141,17 @@ class CheckpointManager:
                 self._gc()
             except BaseException as e:   # surfaced on next wait()
                 self._error = e
+                if self.engine is not None:   # recycle any staged slabs
+                    try:
+                        for flat in snap.values():
+                            for ev in flat.values():
+                                if isinstance(ev, np.ndarray):
+                                    continue
+                                self.engine.wait(ev)
+                                if ev.block is not None and not ev.block.freed:
+                                    self.engine.pool.free(ev.block)
+                    except BaseException:
+                        pass
 
         if block:
             write()

@@ -225,6 +225,13 @@ class HostMemConfig:
     pool_bytes: int = 0                          # 0 -> uncapped host pool
     min_class_bytes: int = 1 << 12               # smallest slab size class
     engine_depth: int = 2                        # in-flight copies (double buffer)
+    # per-traffic-class depth overrides, e.g. (("checkpoint", 16),) lets a
+    # whole checkpoint drain queue without forcing early retires
+    class_depths: Tuple[Tuple[str, int], ...] = ()
+    # per-iteration byte cap on mirroring the applied policy's swap
+    # schedule through the engine (real policy_swap-class copies retired
+    # at each entry's promised release op); 0 disables the mirror
+    mirror_swap_bytes: int = 64 << 20
     calibrate: bool = False                      # measure the link at startup
     calibration_sizes: Tuple[int, ...] = HOSTMEM_CALIBRATION_SIZES
     calibration_iters: int = 3

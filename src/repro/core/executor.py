@@ -14,7 +14,7 @@ link at half/quarter width — see ``repro.kernels.quant_offload``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, Optional, Sequence, Set
 
 import jax
@@ -51,6 +51,10 @@ class AppliedPolicy:
     remat: Set[str]
     fingerprint: str
     raw: bool = False    # save *everything* incl. untagged f32 temporaries
+    # §5.4.2 feedback: tag -> simulator-promised swap-out completion op.
+    # The execution path hands this to the transfer engine so HBM is freed
+    # at the promised op (engine.advance_op) instead of at first reuse.
+    release_plan: Dict[str, int] = field(default_factory=dict)
 
     def to_jax(self):
         if self.raw:
@@ -84,7 +88,20 @@ class Executor:
             save -= remat
         fp = ("off=" + ",".join(sorted(offload))
               + "|save=" + ",".join(sorted(save)))
-        return AppliedPolicy(swap, offload, save, remat, fp)
+        plan = {SwapPolicy.entry_tag(e): e.swap_out_done_op
+                for e in swap.entries if e.swap_out_done_op >= 0}
+        return AppliedPolicy(swap, offload, save, remat, fp,
+                             release_plan=plan)
+
+    def bind_release_points(self, applied: AppliedPolicy, engine) -> int:
+        """Hand the applied policy's release plan to the transfer engine
+        (superseding any previous policy's): swap-outs tagged with a
+        planned tensor carry ``release_op`` and are retired by
+        ``engine.advance_op`` at the simulator-promised op."""
+        engine.clear_planned_releases()
+        for tag, op in applied.release_plan.items():
+            engine.plan_release(tag, op)
+        return len(applied.release_plan)
 
     def conservative(self, prof: Optional[ProfileData] = None) -> AppliedPolicy:
         """WarmUp-stage fallback: offload every candidate site (guaranteed

@@ -37,6 +37,7 @@ class SwapPolicy:
     t_iter: float
     n_ops: int
     fingerprint: str = ""
+    contention_s: float = 0.0      # link backlog priced at generation time
 
     def __post_init__(self):
         sites = sorted({(e.site, e.layer) for e in self.entries})
@@ -90,11 +91,15 @@ class SwapPolicy:
 def generate_policy(prof: ProfileData, cfg: ChameleonConfig,
                     budget: Optional[int] = None,
                     timeline: Optional[MemoryTimeline] = None,
-                    bwmodel=None, engine=None) -> SwapPolicy:
+                    bwmodel=None, engine=None,
+                    register_free_times: bool = True) -> SwapPolicy:
     budget = budget if budget is not None else cfg.hbm_budget_bytes
     tl = timeline or build_timeline(prof)
     mrl = MRL.from_timeline(tl, budget)
-    sim = Simulator(prof, tl.peak_op, cfg, bwmodel=bwmodel)
+    # the engine prices per-class link contention (queued checkpoint /
+    # kv-spill drains shrink the early overlap windows) — an idle or
+    # absent engine reproduces the paper's idle-link assumption exactly
+    sim = Simulator(prof, tl.peak_op, cfg, bwmodel=bwmodel, engine=engine)
     entries: List[PolicyEntry] = []
     chosen: Set[int] = set()
 
@@ -136,7 +141,8 @@ def generate_policy(prof: ProfileData, cfg: ChameleonConfig,
     projected = int(usage.max(initial=0)) + prof.static_bytes
 
     pol = SwapPolicy(entries, projected, tl.peak, budget,
-                     sim.stall_time, prof.t_iter, n)
-    if engine is not None:                          # hostmem free-time hand-off
+                     sim.stall_time, prof.t_iter, n,
+                     contention_s=sim.contention_s)
+    if engine is not None and register_free_times:  # hostmem free-time hand-off
         pol.register_free_times(engine)
     return pol

@@ -69,6 +69,7 @@ class ChameleonRuntime:
         self._example_args: Optional[tuple] = None
         self.variants: List[PolicyVariant] = []
         self._pending_variant: Optional[PolicyVariant] = None
+        self._mirror_src: Optional[np.ndarray] = None
         self.best: Optional[PolicyVariant] = None
         self.step_idx = 0
         self.history: List[dict] = []
@@ -149,6 +150,9 @@ class ChameleonRuntime:
 
     def end_iteration(self, t_iter: float) -> Stage:
         t0 = time.perf_counter()
+        # the policy that *this* iteration executed — _genpolicy_step /
+        # _select_best may replace self.applied for the next one below
+        ran = self.applied
         sig = tokenizer.sequence_signature(self._iter_streams)
         self._iter_streams = []
         prev_stage = self.machine.stage
@@ -171,11 +175,61 @@ class ChameleonRuntime:
                 args = getattr(self, "_last_train_args", self._example_args)
                 self._jaxpr_cache.clear()
                 self.prepare(args)
+        # §5.4.2 execution feedback for the policy that just ran: mirror
+        # its swap schedule through the engine (real policy_swap-class
+        # copies, released by advance_op at each promised op), then sweep
+        # any remaining planned swap-outs — the iteration's op stream has
+        # fully executed, so every promised release point has passed —
+        # and reset the op cursor for the next iteration.
+        if self.hostmem is not None and ran.release_plan:
+            self._mirror_policy_swaps(ran)
+            eng = self.hostmem.engine
+            eng.advance_op(max(ran.release_plan.values()))
+            eng.begin_iteration()
         self.history.append({"step": self.step_idx, "stage": stage.value,
                              "policy": self.applied.fingerprint,
                              "t_iter": t_iter})
         self.profiling_overhead_s += time.perf_counter() - t0
         return stage
+
+    # --------------------------------------- §5.4.2 applied-swap traffic
+    def _mirror_policy_swaps(self, applied: AppliedPolicy) -> None:
+        """Route the executed policy's swap schedule through the host tier
+        as real policy_swap-class copies: each entry's D2H is retired by
+        ``advance_op`` at its simulator-promised release op (dropping the
+        source reference there, not at first reuse), then swapped back in
+        at its planned swap-in point, recycling the slabs.  This is the
+        engine-visible form of the swap traffic XLA executes inside the
+        compiled step; it keeps per-class counters and the bandwidth
+        curve fed by the *applied* policy, capped per iteration by
+        ``HostMemConfig.mirror_swap_bytes``."""
+        swap = applied.swap
+        cap = self.cfg.hostmem.mirror_swap_bytes
+        if swap is None or not cap or not swap.entries:
+            return
+        eng = self.hostmem.engine
+        budget = cap
+        picked = []
+        for e in sorted(swap.entries, key=lambda e: e.birth):
+            if e.nbytes <= 0 or e.nbytes > budget:
+                continue
+            budget -= e.nbytes
+            picked.append(e)
+        if not picked:
+            return
+        # the schedule is in flight all at once — widen the window so
+        # copies retire at their promised ops, not by overflow
+        eng.set_class_depth("policy_swap", len(picked) + 2)
+        biggest = max(e.nbytes for e in picked)
+        if self._mirror_src is None or self._mirror_src.nbytes < biggest:
+            self._mirror_src = np.zeros(biggest, np.uint8)
+        outs = [(e, eng.submit_swap_out(self._mirror_src[:e.nbytes],
+                                        SwapPolicy.entry_tag(e)))
+                for e in picked]
+        for e, _ in sorted(outs, key=lambda t: t[0].swap_out_done_op):
+            eng.advance_op(e.swap_out_done_op)      # promised release point
+        for e, ev in sorted(outs, key=lambda t: t[0].swap_in_op):
+            eng.wait(eng.submit_swap_in(ev, SwapPolicy.entry_tag(e)))
 
     # ----------------------------------------------------- GenPolicy path
     def _genpolicy_step(self, t_iter: float) -> None:
@@ -193,11 +247,15 @@ class ChameleonRuntime:
         hm = self.hostmem
         try:
             if tl.peak > self.budget:
-                # bwmodel prices every variant; free-times are handed to the
-                # engine only for the variant that wins (_select_best)
+                # bwmodel prices transfer sizes and the engine prices the
+                # live per-class link backlog for every variant; free-times
+                # are handed to the engine only for the variant that wins
+                # (_select_best)
                 swap = generate_policy(
                     prof, cfg_v, self.budget, timeline=tl,
-                    bwmodel=hm.bwmodel if hm else None)
+                    bwmodel=hm.bwmodel if hm else None,
+                    engine=hm.engine if hm else None,
+                    register_free_times=False)
                 applied = self.executor.lower(swap, prof)
             else:
                 swap, applied = None, self.executor.baseline()
@@ -214,13 +272,19 @@ class ChameleonRuntime:
             self.best = min(timed, key=lambda v: v.measured_t)
             self.applied = self.best.applied
             if self.hostmem is not None and self.best.swap is not None:
-                # §5.4.2 hand-off: only the applied policy's release points.
-                # NOTE: the executor does not yet route its swap traffic
-                # through the engine, so release_op is observable but not
-                # yet acted on (ROADMAP: "feed engine.release_op back into
-                # the executor").
-                self.hostmem.engine.clear_planned_releases()
-                self.best.swap.register_free_times(self.hostmem.engine)
+                # §5.4.2 hand-off: only the applied policy's release points
+                # reach the engine; end_iteration drives engine.advance_op
+                # over them so swapped buffers are freed at the promised op
+                # instead of at first reuse.  (Rebuilt here rather than
+                # trusted from Executor.lower: variants may carry an
+                # applied policy constructed elsewhere.)
+                self.applied.release_plan = {
+                    SwapPolicy.entry_tag(e): e.swap_out_done_op
+                    for e in self.best.swap.entries
+                    if e.swap_out_done_op >= 0}
+                self.executor.bind_release_points(self.applied,
+                                                  self.hostmem.engine)
+                self.hostmem.engine.begin_iteration()
 
     # ----------------------------------------------------------- reports
     def stats(self) -> dict:
@@ -230,6 +294,9 @@ class ChameleonRuntime:
             "n_variants": len(self.variants),
             "best_knob": self.best.knob if self.best else None,
             "applied": self.applied.fingerprint,
+            "release_plan": len(self.applied.release_plan),
+            "contention_s": (self.best.swap.contention_s
+                             if self.best and self.best.swap else 0.0),
             "profiling_overhead_s": self.profiling_overhead_s,
             "hostmem": self.hostmem.stats() if self.hostmem else None,
         }

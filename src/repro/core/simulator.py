@@ -61,7 +61,7 @@ class PolicyEntry:
 
 class Simulator:
     def __init__(self, prof: ProfileData, peak_op: int, cfg: ChameleonConfig,
-                 bwmodel=None):
+                 bwmodel=None, engine=None):
         self.prof = prof
         self.cfg = cfg
         self.peak_op = peak_op
@@ -69,9 +69,28 @@ class Simulator:
         # measured host-link curve (repro.hostmem.bwmodel) — when calibrated
         # it prices transfers size-dependently instead of with the constant
         self.bwmodel = bwmodel
+        # live transfer engine (repro.hostmem.engine): its per-class backlog
+        # prices link *contention* — the paper's Eq. 3 assumes an idle link,
+        # but a queued checkpoint/kv-spill drain eats into the transfer
+        # budget of the earliest logical layers
+        self.contention_s = (engine.queued_delay() if engine is not None
+                             else 0.0)
         self.layers = self._build_layers()
         self._starts = [l.start_op for l in self.layers]
+        self._charge_contention()
         self.stall_time = 0.0
+
+    def _charge_contention(self) -> None:
+        """Deduct the current link backlog from the earliest layers'
+        transfer budgets: the link is busy draining it when the iteration
+        starts, so early overlap windows are not actually free."""
+        left = self.contention_s
+        for lay in self.layers:
+            if left <= 0.0:
+                break
+            take = min(lay.remaining_time, left)
+            lay.remaining_time -= take
+            left -= take
 
     # ------------------------------------------------------------- layers
     def _build_layers(self) -> List[LogicalLayer]:

@@ -18,13 +18,16 @@ from typing import Optional
 from repro.common.config import ChameleonConfig, HostMemConfig
 from repro.hostmem import metrics as _metrics
 from repro.hostmem.bwmodel import BandwidthModel
-from repro.hostmem.engine import TransferEngine, TransferEvent
+from repro.hostmem.engine import (TC_CHECKPOINT, TC_KV_SPILL, TC_POLICY_SWAP,
+                                  TRAFFIC_CLASSES, TransferEngine,
+                                  TransferEvent)
 from repro.hostmem.kvspill import KVSpillManager, SpilledSlot
 from repro.hostmem.pool import HostBlock, HostMemError, PinnedSlabPool
 
 __all__ = [
     "BandwidthModel", "HostBlock", "HostMemConfig", "HostMemError",
     "HostMemTier", "KVSpillManager", "PinnedSlabPool", "SpilledSlot",
+    "TC_CHECKPOINT", "TC_KV_SPILL", "TC_POLICY_SWAP", "TRAFFIC_CLASSES",
     "TransferEngine", "TransferEvent",
 ]
 
@@ -40,7 +43,8 @@ class HostMemTier:
             min_class_bytes=self.cfg.min_class_bytes)
         self.bwmodel = BandwidthModel(constant_gbps)
         self.engine = TransferEngine(self.pool, depth=self.cfg.engine_depth,
-                                     bwmodel=self.bwmodel)
+                                     bwmodel=self.bwmodel,
+                                     class_depths=dict(self.cfg.class_depths))
         self.kvspill = KVSpillManager(self.pool, self.engine)
         if self.cfg.calibrate:
             self.calibrate()

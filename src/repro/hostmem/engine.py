@@ -1,36 +1,72 @@
-"""Async transfer engine: queued swap-out / swap-in over the pinned pool.
+"""Async transfer engine: prioritized per-traffic-class streams over the
+pinned pool.
 
-Models a dedicated copy stream pair (D2H + H2D) with a bounded number of
-in-flight transfers (``depth``, default 2 = double buffering).  Submission
-is non-blocking and returns a :class:`TransferEvent`; the copy itself runs
-when (a) the in-flight window overflows — submitting transfer *k+depth*
+The host link is shared by three kinds of traffic with very different
+latency requirements, so the engine models one logical D2H/H2D stream
+pair **per traffic class**:
+
+  * ``policy_swap`` — activation swaps scheduled by the policy (§5.4);
+    latency-critical: a late swap-in stalls the training step directly;
+  * ``kv_spill``    — serving-side decode-slot spill/restore;
+  * ``checkpoint``  — bulk checkpoint drains; huge, latency-tolerant.
+
+Each class keeps its own FIFO queue pair and its own bounded in-flight
+window (``depth``, default 2 = double buffering).  Submission is
+non-blocking and returns a :class:`TransferEvent`; the copy itself runs
+when (a) the class window overflows — submitting transfer *k+depth*
 forces transfer *k* to retire, exactly like recycling the front buffer of
-a double buffer — or (b) someone waits on the event.  Completion order is
-FIFO per direction, which is what a hardware copy stream guarantees.
+a double buffer — or (b) someone waits on the event.  Whenever the link
+must run *something*, a **strict-priority scheduler** picks the head of
+the highest-priority non-empty class queue: a policy swap preempts a
+checkpoint drain at transfer granularity (the in-flight copy finishes,
+then the swap jumps the queue), which is exactly the stall ProTrain's
+interleaved chunk engine avoids (arXiv 2406.08334).  Within a class,
+completion order is FIFO per direction — what a hardware copy stream
+guarantees.
 
 The **swap-out completion event is the memory release point**: the engine
 holds the device-array reference until the D2H copy retires and drops it
 there — the custom-``recordStream`` analogue from paper §5.4.2.  The
 policy's free-times map onto these events via :meth:`plan_release`, and
-the Fig-8 "reuse interval" is observable as ``event.release_op``.
+the execution path drives them via :meth:`advance_op`: when the op stream
+reaches a swap-out's promised ``release_op``, the transfer is retired
+*then* — HBM is freed at the simulator-promised op instead of at first
+reuse.
 
 Every executed copy is timed and fed to the attached
 :class:`~repro.hostmem.bwmodel.BandwidthModel`, so steady-state traffic
-keeps the measured latency curve fresh for the simulator.
+keeps the measured latency curve fresh for the simulator; the simulator
+in turn can price link *contention* from the live per-class backlog via
+:meth:`queued_delay`.
+
+The engine is thread-safe (one re-entrant lock around queue mutation):
+the checkpoint writer thread drains its class concurrently with the
+training thread submitting policy swaps.
 """
 from __future__ import annotations
 
 import collections
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.hostmem.pool import HostBlock, PinnedSlabPool
+from repro.hostmem.pool import HostBlock, HostMemError, PinnedSlabPool
 
 SWAP_OUT = "out"                 # device -> host
 SWAP_IN = "in"                   # host -> device
+
+# Traffic classes, highest priority first (index == priority level).
+TC_POLICY_SWAP = "policy_swap"
+TC_KV_SPILL = "kv_spill"
+TC_CHECKPOINT = "checkpoint"
+TRAFFIC_CLASSES: Tuple[str, ...] = (TC_POLICY_SWAP, TC_KV_SPILL,
+                                    TC_CHECKPOINT)
+PRIORITY: Dict[str, int] = {c: i for i, c in enumerate(TRAFFIC_CLASSES)}
+
+_EST_FALLBACK_GBPS = 32.0        # queued_delay estimate without a bwmodel
 
 
 @dataclass
@@ -39,6 +75,7 @@ class TransferEvent:
     kind: str                    # SWAP_OUT | SWAP_IN
     tag: str
     nbytes: int
+    cls: str = TC_POLICY_SWAP    # traffic class (stream selector)
     done: bool = False
     seconds: float = 0.0         # measured copy time once done
     block: Optional[HostBlock] = None   # staging slab (owned until swap-in)
@@ -54,19 +91,57 @@ class TransferEvent:
             self._callbacks.append(fn)
 
 
+@dataclass
+class ClassCounters:
+    """Per-traffic-class byte/time/stall accounting."""
+    n_out: int = 0
+    n_in: int = 0
+    bytes_out: int = 0
+    bytes_in: int = 0
+    time_out_s: float = 0.0
+    time_in_s: float = 0.0
+    forced_retires: int = 0      # completions forced by this class's window
+    stall_s: float = 0.0         # link time spent on other classes while
+    stall_transfers: int = 0     # ... this class had a transfer waiting
+    preemptions: int = 0         # times this class jumped a lower-class head
+    released_at_op: int = 0      # swap-outs retired by advance_op (§5.4.2)
+
+    def as_dict(self) -> dict:
+        return {
+            "n_out": self.n_out, "n_in": self.n_in,
+            "bytes_out": self.bytes_out, "bytes_in": self.bytes_in,
+            "time_out_s": self.time_out_s, "time_in_s": self.time_in_s,
+            "forced_retires": self.forced_retires,
+            "stall_s": self.stall_s,
+            "stall_transfers": self.stall_transfers,
+            "preemptions": self.preemptions,
+            "released_at_op": self.released_at_op,
+        }
+
+
 class TransferEngine:
     def __init__(self, pool: PinnedSlabPool, *, depth: int = 2,
-                 bwmodel=None, device_put: Optional[Callable] = None):
+                 bwmodel=None, device_put: Optional[Callable] = None,
+                 class_depths: Optional[Dict[str, int]] = None):
         assert depth >= 1
         self.pool = pool
         self.depth = depth
         self.bwmodel = bwmodel
         self._device_put = device_put or self._default_device_put
-        self._pending: Dict[str, Deque[TransferEvent]] = {
-            SWAP_OUT: collections.deque(), SWAP_IN: collections.deque()}
+        self._depths = {c: depth for c in TRAFFIC_CLASSES}
+        for c, d in (class_depths or {}).items():
+            self._check_class(c)
+            self._depths[c] = max(int(d), 1)
+        self._pending: Dict[Tuple[str, str], Deque[TransferEvent]] = {
+            (c, k): collections.deque()
+            for c in TRAFFIC_CLASSES for k in (SWAP_OUT, SWAP_IN)}
         self._eid = 0
         self._planned_release: Dict[str, int] = {}
-        # ---- counters ----
+        self._lock = threading.RLock()
+        self.current_op = -1             # execution-path op cursor
+        self.by_class: Dict[str, ClassCounters] = {
+            c: ClassCounters() for c in TRAFFIC_CLASSES}
+        # ---- aggregate counters ----
         self.n_out = self.n_in = 0
         self.bytes_out = self.bytes_in = 0
         self.time_out_s = self.time_in_s = 0.0
@@ -78,39 +153,96 @@ class TransferEngine:
         # block: ev.seconds must measure the copy, not async dispatch
         return jax.block_until_ready(jax.device_put(arr))
 
+    @staticmethod
+    def _check_class(cls: str) -> str:
+        if cls not in PRIORITY:
+            raise ValueError(f"unknown traffic class {cls!r}; "
+                             f"expected one of {TRAFFIC_CLASSES}")
+        return cls
+
     # --------------------------------------------------------- submission
-    def submit_swap_out(self, array, tag: str = "") -> TransferEvent:
-        """Queue a D2H copy of ``array`` into a recycled pool slab."""
+    def submit_swap_out(self, array, tag: str = "",
+                        cls: str = TC_POLICY_SWAP) -> TransferEvent:
+        """Queue a D2H copy of ``array`` on the class's stream."""
+        self._check_class(cls)
         nbytes = int(np.asarray(array).nbytes) if not hasattr(array, "nbytes") \
             else int(array.nbytes)
-        self._eid += 1
-        ev = TransferEvent(self._eid, SWAP_OUT, tag, nbytes, _source=array)
-        ev.release_op = self._planned_release.get(tag, -1)
-        self._enqueue(ev)
+        with self._lock:
+            self._eid += 1
+            ev = TransferEvent(self._eid, SWAP_OUT, tag, nbytes, cls=cls,
+                               _source=array)
+            ev.release_op = self._planned_release.get(tag, -1)
+            self._enqueue(ev)
         return ev
 
     def submit_swap_in(self, block_or_event, tag: str = "",
-                       free_block: bool = True) -> TransferEvent:
-        """Queue an H2D copy restoring a staged block to the device."""
-        blk = block_or_event.block if isinstance(block_or_event, TransferEvent) \
-            else block_or_event
-        if blk is None:
-            raise ValueError("swap-in requires a completed swap-out block")
-        self._eid += 1
-        ev = TransferEvent(self._eid, SWAP_IN, tag or blk.tag, blk.nbytes,
-                           block=blk)
-        ev._free_block = free_block
-        self._enqueue(ev)
+                       free_block: bool = True,
+                       cls: Optional[str] = None) -> TransferEvent:
+        """Queue an H2D copy restoring a staged block to the device.
+
+        Accepts a still-queued swap-out event: the dependency is
+        auto-chained by retiring the swap-out first (it must have staged
+        its bytes before they can come back).
+        """
+        with self._lock:
+            if isinstance(block_or_event, TransferEvent):
+                if not block_or_event.done:
+                    self.wait(block_or_event)     # auto-chain the dependency
+                if cls is None:
+                    cls = block_or_event.cls
+                blk = block_or_event.block
+            else:
+                blk = block_or_event
+            cls = self._check_class(cls or TC_POLICY_SWAP)
+            if blk is None:
+                raise ValueError(
+                    "swap-in requires a staged block: the source swap-out's "
+                    "slab was already consumed (freed or swapped in)")
+            self._eid += 1
+            ev = TransferEvent(self._eid, SWAP_IN, tag or blk.tag, blk.nbytes,
+                               cls=cls, block=blk)
+            ev._free_block = free_block
+            self._enqueue(ev)
         return ev
 
     def _enqueue(self, ev: TransferEvent) -> None:
-        q = self._pending[ev.kind]
+        q = self._pending[(ev.cls, ev.kind)]
         q.append(ev)
-        while len(q) > self.depth:       # double-buffer window overflow
-            self.forced_retires += 1
-            self._execute(q.popleft())
+        while len(q) > self._depths[ev.cls]:  # class window overflow
+            ran = self._step(ev.kind, waiting_cls=ev.cls)
+            if ran is not None and ran.cls == ev.cls:
+                # count only this class's own retirement — higher-priority
+                # transfers jumping ahead are stall, not window pressure
+                self.forced_retires += 1
+                self.by_class[ev.cls].forced_retires += 1
 
     # ---------------------------------------------------------- execution
+    def _step(self, kind: str,
+              waiting_cls: Optional[str] = None) -> Optional[TransferEvent]:
+        """Run the head of the highest-priority non-empty ``kind`` queue
+        (strict priority, transfer-granularity preemption).  When a class
+        is known to be waiting on the link, link time spent serving other
+        classes is charged to its stall counters."""
+        best = None
+        for c in TRAFFIC_CLASSES:            # priority order
+            q = self._pending[(c, kind)]
+            if q:
+                best = (c, q)
+                break
+        if best is None:
+            return None
+        c, q = best
+        ev = q.popleft()
+        if waiting_cls is not None and c != waiting_cls:
+            # a higher-priority class jumped ahead of the waiting one
+            w = self.by_class[waiting_cls]
+            w.stall_transfers += 1
+            self.by_class[c].preemptions += 1
+        self._execute(ev)
+        if waiting_cls is not None and c != waiting_cls:
+            self.by_class[waiting_cls].stall_s += ev.seconds
+        return ev
+
     def _execute(self, ev: TransferEvent) -> None:
         t0 = time.perf_counter()
         if ev.kind == SWAP_OUT:
@@ -124,14 +256,21 @@ class TransferEngine:
                 self.pool.free(ev.block)
         ev.seconds = time.perf_counter() - t0
         ev.done = True
+        cc = self.by_class[ev.cls]
         if ev.kind == SWAP_OUT:
             self.n_out += 1
             self.bytes_out += ev.nbytes
             self.time_out_s += ev.seconds
+            cc.n_out += 1
+            cc.bytes_out += ev.nbytes
+            cc.time_out_s += ev.seconds
         else:
             self.n_in += 1
             self.bytes_in += ev.nbytes
             self.time_in_s += ev.seconds
+            cc.n_in += 1
+            cc.bytes_in += ev.nbytes
+            cc.time_in_s += ev.seconds
         if self.bwmodel is not None:
             self.bwmodel.observe(ev.nbytes, ev.seconds)
         for fn in ev._callbacks:
@@ -140,24 +279,54 @@ class TransferEngine:
 
     # ------------------------------------------------------------ waiting
     def wait(self, ev: TransferEvent) -> TransferEvent:
-        """Retire transfers (FIFO) until ``ev`` completes."""
-        q = self._pending[ev.kind]
-        while not ev.done:
-            if not q:
-                raise RuntimeError(f"event {ev.eid} lost from queue")
-            self._execute(q.popleft())
+        """Retire transfers (strict priority across classes, FIFO within
+        ``ev``'s class) until ``ev`` completes."""
+        with self._lock:
+            while not ev.done:
+                if self._step(ev.kind, waiting_cls=ev.cls) is None:
+                    raise RuntimeError(f"event {ev.eid} lost from queue")
         return ev
 
     def synchronize(self) -> None:
-        """Retire everything in flight, in global submission order."""
-        while self._pending[SWAP_OUT] or self._pending[SWAP_IN]:
-            heads = [q[0] for q in self._pending.values() if q]
-            nxt = min(heads, key=lambda e: e.eid)
-            self._execute(self._pending[nxt.kind].popleft())
+        """Retire everything in flight: strict priority first, submission
+        order within a class."""
+        with self._lock:
+            while True:
+                heads = [(PRIORITY[c], q[0].eid, c, k)
+                         for (c, k), q in self._pending.items() if q]
+                if not heads:
+                    return
+                _, _, c, k = min(heads)
+                self._execute(self._pending[(c, k)].popleft())
+
+    def drain_class(self, cls: str) -> int:
+        """Retire every queued transfer of one class (e.g. the checkpoint
+        writer flushing its drain).  Higher-priority traffic still jumps
+        ahead transfer-by-transfer; returns the number of transfers run."""
+        self._check_class(cls)
+        n = 0
+        with self._lock:
+            for kind in (SWAP_OUT, SWAP_IN):
+                while self._pending[(cls, kind)]:
+                    self._step(kind, waiting_cls=cls)
+                    n += 1
+        return n
+
+    def set_class_depth(self, cls: str, depth: int) -> None:
+        """Widen a class's in-flight window (never shrinks it): a bulk
+        drain raises its own depth so submission stays non-blocking and
+        the whole drain remains preemptible by higher classes."""
+        self._check_class(cls)
+        with self._lock:
+            self._depths[cls] = max(self._depths[cls], int(depth))
 
     @property
     def in_flight(self) -> int:
         return sum(len(q) for q in self._pending.values())
+
+    def class_in_flight(self, cls: str) -> int:
+        self._check_class(cls)
+        return sum(len(self._pending[(cls, k)]) for k in (SWAP_OUT, SWAP_IN))
 
     # --------------------------------------- policy free-time hand-off
     def plan_release(self, tag: str, op_index: int) -> None:
@@ -172,16 +341,69 @@ class TransferEngine:
     def planned_releases(self) -> Dict[str, int]:
         return dict(self._planned_release)
 
+    # -------------------------------------- §5.4.2 execution-path feedback
+    def begin_iteration(self) -> None:
+        """Reset the op cursor at an iteration boundary."""
+        with self._lock:
+            self.current_op = -1
+
+    def advance_op(self, op_index: int) -> int:
+        """The execution path reached ``op_index``: retire every queued
+        swap-out whose simulator-promised ``release_op`` has arrived, so
+        its HBM reference drops at the promised op instead of lingering
+        until first reuse.  Returns the number of transfers released."""
+        n = 0
+        with self._lock:
+            self.current_op = max(self.current_op, op_index)
+            for c in TRAFFIC_CLASSES:
+                q = self._pending[(c, SWAP_OUT)]
+                while q and 0 <= q[0].release_op <= self.current_op:
+                    self._execute(q.popleft())
+                    self.by_class[c].released_at_op += 1
+                    n += 1
+        return n
+
+    # ------------------------------------------- contention introspection
+    def _est_seconds(self, nbytes: int) -> float:
+        if self.bwmodel is not None:
+            return self.bwmodel.transfer_time(nbytes)
+        return nbytes / (_EST_FALLBACK_GBPS * 1e9)
+
+    def queued_delay(self, cls: str = TC_POLICY_SWAP,
+                     kind: str = SWAP_OUT) -> float:
+        """Estimated seconds a *new* ``cls`` transfer would wait on the
+        link right now: the backlog of same-or-higher-priority traffic
+        plus (non-preemptive, transfer-granularity) head-of-line blocking
+        by at most one lower-priority transfer."""
+        self._check_class(cls)
+        pri = PRIORITY[cls]
+        with self._lock:
+            ahead = 0.0
+            hol = 0.0
+            for c in TRAFFIC_CLASSES:
+                q = self._pending[(c, kind)]
+                if not q:
+                    continue
+                if PRIORITY[c] <= pri:
+                    ahead += sum(self._est_seconds(e.nbytes) for e in q)
+                else:
+                    hol = max(hol, self._est_seconds(q[0].nbytes))
+        return ahead + hol
+
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
         tput = lambda b, s: b / s / 1e9 if s > 0 else 0.0   # noqa: E731
-        return {
-            "n_out": self.n_out, "n_in": self.n_in,
-            "bytes_out": self.bytes_out, "bytes_in": self.bytes_in,
-            "time_out_s": self.time_out_s, "time_in_s": self.time_in_s,
-            "gbps_out": tput(self.bytes_out, self.time_out_s),
-            "gbps_in": tput(self.bytes_in, self.time_in_s),
-            "in_flight": self.in_flight,
-            "forced_retires": self.forced_retires,
-            "planned_releases": len(self._planned_release),
-        }
+        with self._lock:
+            return {
+                "n_out": self.n_out, "n_in": self.n_in,
+                "bytes_out": self.bytes_out, "bytes_in": self.bytes_in,
+                "time_out_s": self.time_out_s, "time_in_s": self.time_in_s,
+                "gbps_out": tput(self.bytes_out, self.time_out_s),
+                "gbps_in": tput(self.bytes_in, self.time_in_s),
+                "in_flight": self.in_flight,
+                "forced_retires": self.forced_retires,
+                "planned_releases": len(self._planned_release),
+                "current_op": self.current_op,
+                "classes": {c: cc.as_dict()
+                            for c, cc in self.by_class.items()},
+            }

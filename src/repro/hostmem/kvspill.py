@@ -1,89 +1,137 @@
 """KV-cache spill/restore: park a decode slot's state in the host pool.
 
 A serving slot is one batch row of the model's ``DecodeState`` (stacked
-``(L, B, ...)`` arrays plus a ``pos`` scalar).  Spilling extracts row
-``slot`` of every populated field and stages it into recycled pinned
-slabs through the transfer engine; the HBM row is then free to be
-overwritten by a new request.  Restoring copies the staged rows back
-into (any) slot and resumes decoding exactly where the request left
-off — the Pie-style "CPU memory as cache extension" move (arXiv
-2411.09317), applied to continuous batching so admission can exceed
-HBM-resident slots.
+``(L, B, ...)`` arrays plus a ``pos`` scalar).  Spilling gathers row
+``slot`` of every populated field into **one contiguous packed buffer**
+and stages it through a single ``kv_spill``-class transfer — one pool
+slab and one engine copy per spill instead of one per field, so the slab
+pool sees one size class per slot shape and the strict-priority engine
+sees one queue entry per preemption.  The HBM row is then free to be
+overwritten by a new request.  Restoring swaps the packed image back,
+slices each field out of it, and resumes decoding exactly where the
+request left off — the Pie-style "CPU memory as cache extension" move
+(arXiv 2411.09317), applied to continuous batching so admission can
+exceed HBM-resident slots.
 
 Round-trip is exact: slabs stage raw bytes, so restore reproduces the
 kv/conv/ssd rows bit-for-bit and decode continues deterministically.
+
+Lifetime rules (regression-tested): ``restore`` *consumes* the spill
+image (the staged event is cleared, its slab freed by the H2D copy), and
+``discard`` is idempotent — discarding a restored or already-discarded
+image is a no-op, never a double free.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Any, List, Optional, Tuple
 
-from repro.hostmem.engine import TransferEngine, TransferEvent
-from repro.hostmem.pool import PinnedSlabPool
+import numpy as np
+
+from repro.hostmem.engine import TC_KV_SPILL, TransferEngine, TransferEvent
+from repro.hostmem.pool import HostMemError, PinnedSlabPool
 
 STATE_FIELDS = ("attn_k", "attn_v", "ssm_conv", "ssm_ssd",
                 "cross_k", "cross_v")
 
 
 @dataclass
+class FieldSlice:
+    """Where one state field's row lives inside the packed image."""
+    name: str
+    offset: int
+    nbytes: int
+    shape: Tuple[int, ...]
+    dtype: Any
+
+
+@dataclass
 class SpilledSlot:
-    """Host-resident image of one decode slot."""
+    """Host-resident packed image of one decode slot."""
     tag: str
     pos: int
-    events: Dict[str, TransferEvent] = field(default_factory=dict)
+    layout: List[FieldSlice] = field(default_factory=list)
+    nbytes: int = 0
+    event: Optional[TransferEvent] = None   # None once restored/discarded
 
     @property
-    def nbytes(self) -> int:
-        return sum(e.nbytes for e in self.events.values())
+    def consumed(self) -> bool:
+        return self.event is None
 
 
 class KVSpillManager:
     def __init__(self, pool: PinnedSlabPool, engine: TransferEngine):
         self.pool = pool
         self.engine = engine
-        self.n_spills = self.n_restores = 0
+        self.n_spills = self.n_restores = self.n_discards = 0
         self.bytes_spilled = self.bytes_restored = 0
 
     # -------------------------------------------------------------- spill
     def spill(self, state, slot: int, tag: str = "") -> SpilledSlot:
-        """Queue D2H copies of batch row ``slot`` of every state field."""
+        """Gather batch row ``slot`` of every state field into one packed
+        buffer and queue a single kv_spill-class D2H copy."""
         sp = SpilledSlot(tag, pos=int(state.pos[slot]))
+        chunks: List[np.ndarray] = []
+        off = 0
         for name in STATE_FIELDS:
             arr = getattr(state, name, None)
             if arr is None:
                 continue
-            ev = self.engine.submit_swap_out(arr[:, slot], f"{tag}/{name}")
-            sp.events[name] = ev
+            row = np.ascontiguousarray(np.asarray(arr[:, slot]))
+            sp.layout.append(FieldSlice(name, off, row.nbytes,
+                                        row.shape, row.dtype))
+            chunks.append(row.view(np.uint8).ravel())
+            off += row.nbytes
+        sp.nbytes = off
+        if off:
+            packed = np.concatenate(chunks)
+            sp.event = self.engine.submit_swap_out(
+                packed, tag or "kvslot", cls=TC_KV_SPILL)
         self.n_spills += 1
         self.bytes_spilled += sp.nbytes
         return sp
 
     # ------------------------------------------------------------ restore
     def restore(self, state, sp: SpilledSlot, slot: int):
-        """Swap a spilled slot image back into HBM row ``slot``."""
+        """Swap a spilled slot image back into HBM row ``slot``.  Consumes
+        the image: the staged event is cleared so a later ``discard`` is a
+        no-op rather than a double free."""
         import jax.numpy as jnp
+        if sp.nbytes and sp.event is None:
+            raise HostMemError(
+                f"restore of consumed spill image {sp.tag!r}: it was "
+                "already restored or discarded")
         upd = {}
-        for name, ev_out in sp.events.items():
-            self.engine.wait(ev_out)                 # staging must retire
-            ev_in = self.engine.wait(
-                self.engine.submit_swap_in(ev_out, f"{sp.tag}/{name}"))
-            cur = getattr(state, name)
-            row = jnp.asarray(ev_in.result).astype(cur.dtype)
-            upd[name] = cur.at[:, slot].set(row)
+        if sp.nbytes:
+            # auto-chains if the swap-out is still queued; frees the slab
+            ev_in = self.engine.wait(self.engine.submit_swap_in(
+                sp.event, sp.tag, cls=TC_KV_SPILL))
+            sp.event = None                       # consumed
+            packed = np.asarray(ev_in.result).view(np.uint8).ravel()
+            for fs in sp.layout:
+                raw = packed[fs.offset:fs.offset + fs.nbytes]
+                row = raw.view(fs.dtype).reshape(fs.shape)
+                cur = getattr(state, fs.name)
+                upd[fs.name] = cur.at[:, slot].set(
+                    jnp.asarray(row).astype(cur.dtype))
         upd["pos"] = state.pos.at[slot].set(sp.pos)
         self.n_restores += 1
         self.bytes_restored += sp.nbytes
         return state._replace(**upd)
 
     def discard(self, sp: SpilledSlot) -> None:
-        """Drop a spill image (request cancelled) — slabs go back to the
-        pool without an H2D copy."""
-        for ev in sp.events.values():
-            self.engine.wait(ev)
-            self.pool.free(ev.block)
-        sp.events.clear()
+        """Drop a spill image (request cancelled) — the slab goes back to
+        the pool without an H2D copy.  Idempotent: discarding a restored
+        or already-discarded image is a no-op."""
+        ev, sp.event = sp.event, None
+        if ev is None:
+            return
+        self.engine.wait(ev)                      # staging must retire
+        self.pool.free(ev.block)
+        self.n_discards += 1
 
     def stats(self) -> dict:
         return {"n_spills": self.n_spills, "n_restores": self.n_restores,
+                "n_discards": self.n_discards,
                 "bytes_spilled": self.bytes_spilled,
                 "bytes_restored": self.bytes_restored}

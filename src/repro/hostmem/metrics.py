@@ -35,6 +35,15 @@ def format_summary(stats: dict) -> str:
         f"{e['gbps_out']:.2f} GB/s), {e['n_in']} in "
         f"({e['bytes_in'] / 2**20:.1f} MiB, {e['gbps_in']:.2f} GB/s)",
     ]
+    for cls, c in e.get("classes", {}).items():
+        if not (c["n_out"] or c["n_in"]):
+            continue
+        lines.append(
+            f"  {cls}: {c['n_out']} out / {c['n_in']} in, "
+            f"{(c['bytes_out'] + c['bytes_in']) / 2**20:.1f} MiB, "
+            f"stall {c['stall_s'] * 1e3:.1f} ms "
+            f"({c['stall_transfers']} waits), "
+            f"released@op {c['released_at_op']}")
     bw = stats["bwmodel"]
     lines.append("bwmodel: " + ("calibrated, %d points" % bw["points"]
                                 if bw["calibrated"] else

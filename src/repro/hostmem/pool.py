@@ -18,6 +18,7 @@ Accounting invariants (enforced, property-tested):
 from __future__ import annotations
 
 import itertools
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -55,6 +56,10 @@ class HostBlock:
     data: np.ndarray = field(repr=False)
     tag: str = ""
     freed: bool = False
+    # payload descriptor — set by write(); None until then so read() can
+    # give a real diagnostic instead of a bare AttributeError
+    shape: Optional[tuple] = None
+    dtype: Optional[np.dtype] = None
 
     def view(self) -> np.ndarray:
         return self.data[: self.nbytes]
@@ -70,6 +75,10 @@ class HostBlock:
 
     def read(self) -> np.ndarray:
         """Recover the staged array (copy — the slab stays reusable)."""
+        if self.shape is None or self.dtype is None:
+            raise HostMemError(
+                f"block {self.bid} ({self.tag!r}) read before write: "
+                "no payload has been staged, shape/dtype unknown")
         return self.view().copy().view(self.dtype).reshape(self.shape)
 
 
@@ -83,6 +92,9 @@ class PinnedSlabPool:
         self._free: Dict[int, List[np.ndarray]] = {}
         self._live: Dict[int, HostBlock] = {}
         self._ids = itertools.count()
+        # alloc/free are called from both the training thread and the
+        # checkpoint writer thread (which recycles staged slabs)
+        self._lock = threading.Lock()
         # ---- stats ----
         self.bytes_reserved = 0          # total slab bytes grabbed from host
         self.bytes_in_use = 0            # requested bytes of live blocks
@@ -98,36 +110,39 @@ class PinnedSlabPool:
         if nbytes <= 0:
             raise HostMemError(f"invalid allocation size {nbytes}")
         cb = size_class(nbytes, self.min_class)
-        self.alloc_count += 1
-        bucket = self._free.get(cb)
-        if bucket:
-            slab = bucket.pop()
-            self.reuse_hits += 1
-        else:
-            if (self.capacity is not None
-                    and self.bytes_reserved + cb > self.capacity):
-                raise HostMemError(
-                    f"host pool exhausted: {self.bytes_reserved + cb} "
-                    f"> capacity {self.capacity}")
-            slab = _raw_slab(cb)
-            self.slab_allocs += 1
-            self.bytes_reserved += cb
-            self.peak_reserved = max(self.peak_reserved, self.bytes_reserved)
-        blk = HostBlock(next(self._ids), nbytes, cb, slab, tag)
-        self._live[blk.bid] = blk
-        self.bytes_in_use += nbytes
-        self.class_bytes_in_use += cb
+        with self._lock:
+            self.alloc_count += 1
+            bucket = self._free.get(cb)
+            if bucket:
+                slab = bucket.pop()
+                self.reuse_hits += 1
+            else:
+                if (self.capacity is not None
+                        and self.bytes_reserved + cb > self.capacity):
+                    raise HostMemError(
+                        f"host pool exhausted: {self.bytes_reserved + cb} "
+                        f"> capacity {self.capacity}")
+                slab = _raw_slab(cb)
+                self.slab_allocs += 1
+                self.bytes_reserved += cb
+                self.peak_reserved = max(self.peak_reserved,
+                                         self.bytes_reserved)
+            blk = HostBlock(next(self._ids), nbytes, cb, slab, tag)
+            self._live[blk.bid] = blk
+            self.bytes_in_use += nbytes
+            self.class_bytes_in_use += cb
         return blk
 
     def free(self, blk: HostBlock) -> None:
-        if blk.freed or blk.bid not in self._live:
-            raise HostMemError(f"double free / foreign block {blk.bid}")
-        del self._live[blk.bid]
-        blk.freed = True
-        self.bytes_in_use -= blk.nbytes
-        self.class_bytes_in_use -= blk.class_bytes
-        self._free.setdefault(blk.class_bytes, []).append(blk.data)
-        self.free_count += 1
+        with self._lock:
+            if blk.freed or blk.bid not in self._live:
+                raise HostMemError(f"double free / foreign block {blk.bid}")
+            del self._live[blk.bid]
+            blk.freed = True
+            self.bytes_in_use -= blk.nbytes
+            self.class_bytes_in_use -= blk.class_bytes
+            self._free.setdefault(blk.class_bytes, []).append(blk.data)
+            self.free_count += 1
 
     # ------------------------------------------------------------- stats
     @property

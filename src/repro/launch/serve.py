@@ -58,7 +58,13 @@ def main():
           f"{toks / dt:.1f} tok/s, {srv.ticks} ticks, "
           f"{srv.n_preemptions} preemptions")
     if hostmem is not None:
-        print(hostmem.summary())
+        print(hostmem.summary())          # includes per-traffic-class lines
+        kv = srv.stats()["kv_spill_class"]
+        if kv is not None and (kv["n_out"] or kv["n_in"]):
+            print(f"kv_spill link: {kv['n_out']} spills staged / "
+                  f"{kv['n_in']} restored, "
+                  f"stalled {kv['stall_s'] * 1e3:.1f} ms behind "
+                  f"higher-priority traffic")
 
 
 if __name__ == "__main__":

@@ -213,6 +213,11 @@ class Server:
 
     # --------------------------------------------------------------- stats
     def stats(self) -> dict:
+        hm = self.hostmem.stats() if self.hostmem else None
+        # surface the serving-relevant traffic class directly: spill time
+        # lost to other link traffic is a tick-latency component
+        kv_cls = (hm["engine"]["classes"]["kv_spill"]
+                  if hm is not None else None)
         return {
             "ticks": self.ticks,
             "active": len(self.active),
@@ -220,5 +225,6 @@ class Server:
             "queued": len(self.queue),
             "completed": len(self.completed),
             "preemptions": self.n_preemptions,
-            "hostmem": self.hostmem.stats() if self.hostmem else None,
+            "kv_spill_class": kv_cls,
+            "hostmem": hm,
         }

@@ -62,8 +62,6 @@ class Trainer:
         self.opt_state = adamw_init(self.params)
         self.loss_scale = init_loss_scale(tcfg.loss_scale)
         self.step = 0
-        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
-                                      keep=tcfg.keep_checkpoints)
         self.straggler = StragglerDetector()
         self.report = TrainReport()
 
@@ -71,6 +69,12 @@ class Trainer:
             return jax.jit(S.make_grad_step(cfg, tcfg, policy))
 
         self.rt = ChameleonRuntime(self.cham, step_builder)
+        # checkpoint drains share the host link with policy swaps: route
+        # them through the engine's lowest-priority checkpoint stream so
+        # swap traffic preempts the drain instead of queueing behind it
+        self.ckpt = CheckpointManager(
+            tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints,
+            engine=self.rt.hostmem.engine if self.rt.hostmem else None)
         self._apply = jax.jit(S.make_apply_step(cfg, tcfg))
         self._eval = jax.jit(S.make_eval_step(cfg))
         self._prepared = False

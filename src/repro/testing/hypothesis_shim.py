@@ -11,7 +11,7 @@ runs, no shrinking, same assertion surface.
 
 Supported subset: ``given``, ``settings`` (``max_examples`` honored,
 ``deadline`` ignored), ``strategies.integers/floats/booleans/
-sampled_from/lists/composite``.
+sampled_from/lists/tuples/composite``.
 """
 from __future__ import annotations
 
@@ -89,6 +89,14 @@ class _Lists(SearchStrategy):
     def do_draw(self, rnd):
         n = rnd.randint(self.min_size, self.max_size)
         return [self.elements.do_draw(rnd) for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *elements: SearchStrategy):
+        self.elements = elements
+
+    def do_draw(self, rnd):
+        return tuple(s.do_draw(rnd) for s in self.elements)
 
 
 class _Composite(SearchStrategy):
@@ -183,6 +191,7 @@ def install() -> None:
     st.booleans = _Booleans
     st.sampled_from = _SampledFrom
     st.lists = _Lists
+    st.tuples = _Tuples
     st.composite = composite
     st.SearchStrategy = SearchStrategy
     hyp.strategies = st

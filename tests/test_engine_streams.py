@@ -1,0 +1,476 @@
+"""Multi-stream transfer engine: per-traffic-class FIFO, strict-priority
+draining, release-op execution feedback, contention pricing, checkpoint
+routing, and the ordering/lifetime regressions the split fixed."""
+import collections
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import ChameleonConfig, HostMemConfig
+from repro.hostmem import (HostMemError, HostMemTier, PinnedSlabPool,
+                           TC_CHECKPOINT, TC_KV_SPILL, TC_POLICY_SWAP,
+                           TRAFFIC_CLASSES, TransferEngine)
+from repro.hostmem.engine import PRIORITY
+
+
+def _tier(**class_depths):
+    return HostMemTier(HostMemConfig(
+        class_depths=tuple(class_depths.items())))
+
+
+# ------------------------------------------------------------ regressions
+def test_swap_in_autochains_queued_swap_out():
+    """Regression: submit_swap_in on a still-queued swap-out used to raise
+    ValueError (ev.block is None until execution); it must auto-chain by
+    retiring the swap-out first."""
+    tier = _tier(policy_swap=8)
+    eng = tier.engine
+    arr = np.arange(64, dtype=np.float32)
+    ev_out = eng.submit_swap_out(arr, "t")
+    assert not ev_out.done and ev_out.block is None    # still queued
+    ev_in = eng.wait(eng.submit_swap_in(ev_out, "t"))
+    assert ev_out.done                                 # dependency retired
+    np.testing.assert_array_equal(np.asarray(ev_in.result), arr)
+
+
+def test_swap_in_of_consumed_block_still_rejected():
+    tier = HostMemTier()
+    eng = tier.engine
+    ev = eng.wait(eng.submit_swap_out(np.zeros(64, np.uint8), "t"))
+    eng.wait(eng.submit_swap_in(ev))       # frees the slab, block consumed
+    ev.block = None
+    with pytest.raises(ValueError):
+        eng.submit_swap_in(ev)
+
+
+def _kv_state(L=2, B=3, D=4):
+    import jax.numpy as jnp
+    State = collections.namedtuple("State", ["pos", "attn_k", "attn_v"])
+    rng = np.random.RandomState(0)
+    return State(
+        pos=jnp.asarray(np.arange(B, dtype=np.int32) + 5),
+        attn_k=jnp.asarray(rng.randn(L, B, D).astype(np.float32)),
+        attn_v=jnp.asarray(rng.randn(L, B, D).astype(np.float32)))
+
+
+def test_restore_then_discard_is_not_double_free():
+    """Regression: restore left retired events in the spill image, so a
+    later discard double-freed the slabs and raised HostMemError."""
+    tier = HostMemTier()
+    state = _kv_state()
+    sp = tier.kvspill.spill(state, 1, tag="req1")
+    state2 = tier.kvspill.restore(state, sp, 1)
+    np.testing.assert_array_equal(np.asarray(state2.attn_k),
+                                  np.asarray(state.attn_k))
+    tier.kvspill.discard(sp)               # must be a no-op, not a crash
+    tier.kvspill.discard(sp)               # idempotent
+    assert tier.pool.bytes_in_use == 0
+    tier.pool.check()
+
+
+def test_discard_frees_once_and_restore_of_discarded_raises():
+    tier = HostMemTier()
+    state = _kv_state()
+    sp = tier.kvspill.spill(state, 0, tag="req0")
+    tier.kvspill.discard(sp)
+    assert tier.pool.bytes_in_use == 0 and tier.kvspill.n_discards == 1
+    tier.kvspill.discard(sp)               # second discard: no-op
+    assert tier.kvspill.n_discards == 1
+    with pytest.raises(HostMemError):
+        tier.kvspill.restore(state, sp, 0)
+    tier.pool.check()
+
+
+def test_spill_is_one_packed_slab_per_slot():
+    """The packed layout stages one slab + one engine copy per spill, not
+    one per state field."""
+    tier = HostMemTier()
+    state = _kv_state()
+    sp = tier.kvspill.spill(state, 0, tag="req0")
+    tier.engine.synchronize()
+    assert tier.engine.n_out == 1          # one copy for two fields
+    assert tier.pool.live_blocks == 1      # one slab holds the whole image
+    assert len(sp.layout) == 2 and sp.nbytes == sum(
+        fs.nbytes for fs in sp.layout)
+    assert tier.engine.stats()["classes"]["kv_spill"]["n_out"] == 1
+    tier.kvspill.discard(sp)
+
+
+def test_read_before_write_raises_descriptive_error():
+    """Regression: HostBlock.read() before write() failed with a bare
+    AttributeError; it must raise HostMemError naming the block."""
+    p = PinnedSlabPool()
+    blk = p.alloc(256, tag="staging")
+    with pytest.raises(HostMemError, match="read before write"):
+        blk.read()
+    blk.write(np.arange(64, dtype=np.int32))
+    np.testing.assert_array_equal(blk.read(), np.arange(64, dtype=np.int32))
+
+
+# ------------------------------------------------- priority scheduling
+def test_strict_priority_policy_swap_preempts_checkpoint_drain():
+    tier = _tier(checkpoint=16)
+    eng = tier.engine
+    ck = [eng.submit_swap_out(np.zeros(1 << 16, np.uint8), f"ck{i}",
+                              cls=TC_CHECKPOINT) for i in range(6)]
+    pol = eng.submit_swap_out(np.zeros(1 << 12, np.uint8), "pol",
+                              cls=TC_POLICY_SWAP)
+    # waiting on the *drain* must run the policy swap first
+    eng.wait(ck[0])
+    assert pol.done
+    st_ck = eng.by_class[TC_CHECKPOINT]
+    assert st_ck.stall_transfers >= 1 and st_ck.stall_s > 0.0
+    assert eng.by_class[TC_POLICY_SWAP].preemptions >= 1
+    eng.synchronize()
+    assert all(e.done for e in ck)
+
+
+def test_per_class_windows_are_independent():
+    tier = _tier(policy_swap=1, checkpoint=4)
+    eng = tier.engine
+    ck = [eng.submit_swap_out(np.zeros(1 << 12, np.uint8), f"ck{i}",
+                              cls=TC_CHECKPOINT) for i in range(4)]
+    assert not any(e.done for e in ck)     # checkpoint window holds 4
+    p0 = eng.submit_swap_out(np.zeros(1 << 12, np.uint8), "p0")
+    p1 = eng.submit_swap_out(np.zeros(1 << 12, np.uint8), "p1")
+    # policy depth=1: p1 overflows the window and forces p0 to retire,
+    # without touching the queued checkpoint drain
+    assert p0.done and not p1.done
+    assert not any(e.done for e in ck)
+    assert eng.by_class[TC_POLICY_SWAP].forced_retires == 1
+    eng.synchronize()
+
+
+def test_wait_on_kv_spill_jumps_checkpoint_not_policy():
+    tier = _tier(policy_swap=8, kv_spill=8, checkpoint=8)
+    eng = tier.engine
+    ck = eng.submit_swap_out(np.zeros(1 << 12, np.uint8), "ck",
+                             cls=TC_CHECKPOINT)
+    kv = eng.submit_swap_out(np.zeros(1 << 12, np.uint8), "kv",
+                             cls=TC_KV_SPILL)
+    pol = eng.submit_swap_out(np.zeros(1 << 12, np.uint8), "pol",
+                              cls=TC_POLICY_SWAP)
+    eng.wait(kv)
+    assert pol.done                        # higher class went first
+    assert not ck.done                     # lower class still queued
+    eng.synchronize()
+
+
+def test_unknown_traffic_class_rejected():
+    tier = HostMemTier()
+    with pytest.raises(ValueError, match="unknown traffic class"):
+        tier.engine.submit_swap_out(np.zeros(16, np.uint8), cls="gradients")
+
+
+# --------------------------------------------- §5.4.2 release-op feedback
+def test_advance_op_releases_at_promised_op():
+    tier = _tier(policy_swap=8)
+    eng = tier.engine
+    eng.plan_release("resid:0:1", 5)
+    a = np.ones(256, np.float32)
+    ev = eng.submit_swap_out(a, "resid:0:1")
+    assert ev.release_op == 5 and not ev.done
+    assert eng.advance_op(4) == 0          # promised op not reached yet
+    assert not ev.done and ev._source is a
+    assert eng.advance_op(5) == 1          # released at the promised op
+    assert ev.done and ev._source is None  # HBM ref dropped there
+    assert eng.by_class[TC_POLICY_SWAP].released_at_op == 1
+    eng.begin_iteration()
+    assert eng.current_op == -1
+
+
+def test_advance_op_keeps_fifo_unplanned_head_blocks():
+    tier = _tier(policy_swap=8)
+    eng = tier.engine
+    first = eng.submit_swap_out(np.zeros(64, np.uint8), "unplanned")
+    eng.plan_release("planned", 3)
+    second = eng.submit_swap_out(np.zeros(64, np.uint8), "planned")
+    # FIFO: the unplanned head blocks early release of the one behind it
+    assert eng.advance_op(10) == 0
+    assert not first.done and not second.done
+    eng.synchronize()
+
+
+def test_executor_release_plan_reaches_engine(llama_profile):
+    from repro.core.executor import Executor
+    from repro.core.memtrace import build_timeline
+    from repro.core.policy import SwapPolicy, generate_policy
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    cfg = ChameleonConfig(groups_per_phase=8)
+    pol = generate_policy(prof, cfg, int(tl.peak * 0.7), timeline=tl)
+    applied = Executor(cfg).lower(pol, prof)
+    assert applied.release_plan
+    assert applied.release_plan == {
+        SwapPolicy.entry_tag(e): e.swap_out_done_op
+        for e in pol.entries if e.swap_out_done_op >= 0}
+    tier = HostMemTier()
+    n = Executor(cfg).bind_release_points(applied, tier.engine)
+    assert n == len(applied.release_plan)
+    assert tier.engine.planned_releases() == applied.release_plan
+
+
+def test_runtime_end_iteration_drives_release_ops(llama_profile):
+    """The runtime must retire planned swap-outs at iteration end (the op
+    stream has passed every promised release point) and reset the cursor."""
+    from repro.core.runtime import ChameleonRuntime
+    rt = ChameleonRuntime(ChameleonConfig(), lambda pol: (lambda x: x))
+    eng = rt.hostmem.engine
+    rt.applied.release_plan = {"site:0:1": 7}
+    eng.plan_release("site:0:1", 7)
+    ev = eng.submit_swap_out(np.zeros(128, np.uint8), "site:0:1")
+    assert not ev.done
+    rt.end_iteration(0.01)
+    assert ev.done and ev._source is None
+    assert eng.current_op == -1            # fresh cursor for next iteration
+
+
+# ---------------------------------------------------- contention pricing
+def _toy_profile(n_ops=100):
+    from repro.core.profiler import ProfileData, TensorInstance
+    tensors = [TensorInstance(i, 1 << 20, i, n_ops - i, site="ffn_pre",
+                              layer=i) for i in range(10)]
+    return ProfileData(np.zeros(n_ops, np.int32), tensors, 1.0, 0)
+
+
+def test_simulator_prices_link_contention():
+    from repro.core.simulator import Simulator
+    prof = _toy_profile()
+    cfg = ChameleonConfig(groups_per_phase=8)
+    tier = _tier(checkpoint=32)
+    for i in range(8):                     # queued checkpoint drain
+        tier.engine.submit_swap_out(np.zeros(4 << 20, np.uint8),
+                                    f"ck{i}", cls=TC_CHECKPOINT)
+    idle = Simulator(prof, 50, cfg)
+    busy = Simulator(prof, 50, cfg, engine=tier.engine)
+    assert idle.contention_s == 0.0
+    assert busy.contention_s == pytest.approx(
+        tier.engine.queued_delay(), rel=1e-6)
+    assert busy.contention_s > 0.0
+    # the backlog eats the earliest layers' overlap budget
+    assert (busy.layers[0].remaining_time
+            < idle.layers[0].remaining_time)
+    tier.engine.synchronize()
+
+
+def test_generate_policy_records_contention(llama_profile):
+    from repro.core.memtrace import build_timeline
+    from repro.core.policy import generate_policy
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    tier = _tier(checkpoint=32)
+    for i in range(4):
+        tier.engine.submit_swap_out(np.zeros(8 << 20, np.uint8),
+                                    f"ck{i}", cls=TC_CHECKPOINT)
+    pol = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                          int(tl.peak * 0.7), timeline=tl,
+                          engine=tier.engine)
+    assert pol.contention_s > 0.0
+    idle = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                           int(tl.peak * 0.7), timeline=tl)
+    assert idle.contention_s == 0.0
+    tier.engine.synchronize()
+
+
+# --------------------------------------------------- checkpoint routing
+def test_checkpoint_manager_routes_through_checkpoint_class(tmp_path):
+    from repro.checkpointing.manager import CheckpointManager
+    tier = HostMemTier()
+    mgr = CheckpointManager(str(tmp_path), engine=tier.engine)
+    tree = {"w": np.arange(1024, dtype=np.float32).reshape(32, 32),
+            "b": np.full(7, 3.5, np.float64)}
+    mgr.save(3, {"params": tree}, extra={"step": 3}, block=False)
+    mgr.wait()
+    cs = tier.engine.stats()["classes"]
+    assert cs["checkpoint"]["n_out"] == 2
+    assert cs["policy_swap"]["n_out"] == 0
+    assert tier.pool.bytes_in_use == 0     # writer recycled every slab
+    restored, extra = mgr.restore(
+        3, {"params": {"w": np.zeros((32, 32), np.float32),
+                       "b": np.zeros(7, np.float64)}})
+    np.testing.assert_array_equal(restored["params"]["w"], tree["w"])
+    np.testing.assert_array_equal(np.asarray(restored["params"]["b"]),
+                                  tree["b"])
+    assert extra["step"] == 3
+    tier.pool.check()
+
+
+def test_checkpoint_drain_preempted_by_policy_swap(tmp_path):
+    """While a checkpoint drain is queued, a policy swap submitted by the
+    'training thread' completes ahead of it."""
+    from repro.checkpointing.manager import CheckpointManager
+    tier = _tier(checkpoint=64)
+    mgr = CheckpointManager(str(tmp_path), engine=tier.engine)
+    tree = {f"w{i}": np.zeros((256, 256), np.float32) for i in range(6)}
+    mgr.save(1, {"params": tree}, block=False)   # drain queues async
+    pol = tier.engine.submit_swap_out(np.ones(1 << 16, np.uint8), "swap")
+    tier.engine.wait(pol)
+    assert pol.done
+    mgr.wait()                                   # writer finished its drain
+    cs = tier.engine.stats()["classes"]
+    assert cs["checkpoint"]["n_out"] == 6
+    assert tier.pool.live_blocks == 1            # only the policy slab
+    tier.engine.pool.free(pol.block)
+    tier.pool.check()
+
+
+def test_set_class_depth_widens_and_never_shrinks():
+    tier = HostMemTier()
+    eng = tier.engine
+    eng.set_class_depth(TC_CHECKPOINT, 8)
+    evs = [eng.submit_swap_out(np.zeros(64, np.uint8), f"c{i}",
+                               cls=TC_CHECKPOINT) for i in range(8)]
+    assert not any(e.done for e in evs)    # whole drain queued, no inline
+    eng.set_class_depth(TC_CHECKPOINT, 2)  # must not shrink
+    eng.submit_swap_out(np.zeros(64, np.uint8), "c8", cls=TC_CHECKPOINT)
+    assert evs[0].done and not evs[1].done  # 9th overflows the 8-window
+    eng.synchronize()
+
+
+def test_checkpoint_save_widens_window_to_drain(tmp_path):
+    from repro.checkpointing.manager import CheckpointManager
+    tier = HostMemTier()                   # default depth 2
+    mgr = CheckpointManager(str(tmp_path), engine=tier.engine)
+    tree = {f"w{i}": np.zeros(128, np.float32) for i in range(10)}
+    mgr.save(1, {"params": tree}, block=False)
+    assert tier.engine._depths[TC_CHECKPOINT] >= 12   # 10 arrays + slack
+    mgr.wait()
+    assert tier.pool.bytes_in_use == 0
+
+
+def test_runtime_mirrors_applied_swap_traffic(llama_profile):
+    """The executed policy's swap schedule flows through the engine as
+    real policy_swap traffic, released at the promised ops."""
+    from repro.core.memtrace import build_timeline
+    from repro.core.policy import generate_policy
+    from repro.core.runtime import ChameleonRuntime
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    rt = ChameleonRuntime(ChameleonConfig(), lambda pol: (lambda x: x))
+    pol = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                          int(tl.peak * 0.7), timeline=tl)
+    rt.applied = rt.executor.lower(pol, prof)
+    rt.executor.bind_release_points(rt.applied, rt.hostmem.engine)
+    rt.end_iteration(0.01)
+    cs = rt.hostmem.engine.stats()["classes"][TC_POLICY_SWAP]
+    assert cs["n_out"] > 0 and cs["n_in"] == cs["n_out"]
+    assert cs["released_at_op"] == cs["n_out"]   # freed at promised ops
+    assert rt.hostmem.pool.bytes_in_use == 0     # slabs all recycled
+    rt.hostmem.pool.check()
+
+
+def test_mirror_disabled_by_config(llama_profile):
+    from repro.core.memtrace import build_timeline
+    from repro.core.policy import generate_policy
+    from repro.core.runtime import ChameleonRuntime
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    cfg = ChameleonConfig(hostmem=HostMemConfig(mirror_swap_bytes=0))
+    rt = ChameleonRuntime(cfg, lambda pol: (lambda x: x))
+    pol = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                          int(tl.peak * 0.7), timeline=tl)
+    rt.applied = rt.executor.lower(pol, prof)
+    rt.end_iteration(0.01)
+    assert rt.hostmem.engine.n_out == 0          # mirror off: no traffic
+
+
+# ------------------------------------------------------- property tests
+@given(st.lists(st.tuples(st.sampled_from(TRAFFIC_CLASSES),
+                          st.integers(1, 1 << 16)),
+                min_size=1, max_size=40))
+@settings(max_examples=25, deadline=None)
+def test_per_class_fifo_under_interleaved_traffic(subs):
+    """Property: whatever the interleaving and forced retires, completion
+    order *within* each class is submission order."""
+    tier = HostMemTier(HostMemConfig(engine_depth=2))
+    eng = tier.engine
+    done = []
+    evs = []
+    for cls, size in subs:
+        ev = eng.submit_swap_out(np.zeros(size, np.uint8), cls=cls)
+        ev.on_done(lambda e: done.append((e.cls, e.eid)))
+        evs.append(ev)
+    eng.synchronize()
+    per_class = {}
+    for cls, eid in done:
+        per_class.setdefault(cls, []).append(eid)
+    for cls, eids in per_class.items():
+        assert eids == sorted(eids), f"{cls} completed out of FIFO order"
+    assert len(done) == len(subs)
+    for ev in evs:
+        tier.pool.free(ev.block)
+    tier.pool.check()
+
+
+@given(st.lists(st.tuples(st.sampled_from(TRAFFIC_CLASSES),
+                          st.integers(1, 1 << 14)),
+                min_size=2, max_size=24))
+@settings(max_examples=25, deadline=None)
+def test_strict_priority_drain_order(subs):
+    """Property: with everything queued up front, the scheduler drains in
+    (priority, submission) order."""
+    tier = _tier(policy_swap=64, kv_spill=64, checkpoint=64)
+    eng = tier.engine
+    done = []
+    for cls, size in subs:
+        ev = eng.submit_swap_out(np.zeros(size, np.uint8), cls=cls)
+        ev.on_done(lambda e: done.append((PRIORITY[e.cls], e.eid)))
+    eng.synchronize()
+    assert done == sorted(done), "drain violated strict priority order"
+    eng_stats = eng.stats()
+    assert eng_stats["forced_retires"] == 0
+    tier.pool.check()
+
+
+@given(st.lists(st.tuples(st.sampled_from(TRAFFIC_CLASSES),
+                          st.integers(1, 1 << 16),
+                          st.integers(0, 5)),
+                min_size=1, max_size=40))
+@settings(max_examples=25, deadline=None)
+def test_pool_invariants_under_multiclass_churn(ops):
+    """Property: random interleaved multi-class swap-out / swap-in /
+    release traffic never double-books the pool and leaks nothing."""
+    tier = HostMemTier(HostMemConfig(engine_depth=2))
+    eng = tier.engine
+    outstanding = []
+    op_idx = 0
+    for cls, size, action in ops:
+        ev = eng.submit_swap_out(np.zeros(size, np.uint8),
+                                 f"op{op_idx}", cls=cls)
+        outstanding.append(ev)
+        if action == 1 and outstanding:          # immediate round trip
+            eng.wait(eng.submit_swap_in(outstanding.pop(0)))
+        elif action == 2:
+            eng.advance_op(op_idx)               # release-op sweep (no-op:
+        elif action == 3 and outstanding:        #  nothing planned)
+            eng.wait(outstanding[-1])
+        op_idx += 1
+        tier.pool.check()                        # invariant holds mid-churn
+    eng.synchronize()
+    for ev in outstanding:
+        eng.wait(eng.submit_swap_in(ev))
+    assert tier.pool.bytes_in_use == 0
+    assert tier.pool.live_blocks == 0
+    tier.pool.check()
+
+
+def test_kv_spill_roundtrip_under_concurrent_classes():
+    """A spill image restored while checkpoint traffic floods the link is
+    still bit-exact, and its class counters stay separated."""
+    tier = _tier(checkpoint=32)
+    state = _kv_state(L=3, B=4, D=8)
+    sp = tier.kvspill.spill(state, 2, tag="req")
+    for i in range(6):
+        tier.engine.submit_swap_out(np.zeros(1 << 18, np.uint8),
+                                    f"ck{i}", cls=TC_CHECKPOINT)
+    state2 = tier.kvspill.restore(state, sp, 2)
+    np.testing.assert_array_equal(np.asarray(state2.attn_k),
+                                  np.asarray(state.attn_k))
+    np.testing.assert_array_equal(np.asarray(state2.attn_v),
+                                  np.asarray(state.attn_v))
+    cs = tier.engine.stats()["classes"]
+    assert cs["kv_spill"]["n_out"] == 1 and cs["kv_spill"]["n_in"] == 1
+    assert cs["kv_spill"]["bytes_out"] == sp.nbytes
+    tier.engine.synchronize()
+    tier.pool.check()
