@@ -1,0 +1,160 @@
+"""Adaptation cost with the policy store on vs off (repro.policystore).
+
+Each scenario drives the real Trainer + ChameleonRuntime through a
+recurring or drifting operator-sequence pattern and measures
+**iterations-to-recovered-throughput**: the GenPolicy steps spent (each
+one runs the Detailed profiler and a fresh Algo-2 policy generation) and
+the steps from a sequence change back to Stable.
+
+Scenarios (ISSUE 4 suite):
+
+  * ``recur``        — train→eval→train interleave: the exact sequence
+    pair recurs every eval step; the store's reuse tier should absorb
+    every re-adaptation after the first;
+  * ``cold_restart`` — a fresh process with a warm on-disk store must
+    apply the cached policy without entering GenPolicy at all;
+  * ``seqlen_cycle`` — alternating seq-len buckets: the op stream
+    tokenizes identically but shapes differ, exercising the
+    matching-demotion path (reuse -> warm-start) and bucket-keyed
+    records;
+  * ``layer_change`` — a different model depth shares the store dir:
+    the length-ratio gate must *not* reuse across it;
+  * ``moe_experts``  — expert-count change on a MoE config: moderate
+    drift, warm-start territory.
+
+Derived columns report GenPolicy steps with the store on vs off plus
+per-tier hit counts; the acceptance bar is ``on < off`` for ``recur``
+and ``genpolicy=0`` for ``cold_restart``.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from typing import List, Optional
+
+import numpy as np
+
+import repro.configs as C
+from repro.common.config import ChameleonConfig, PolicyStoreConfig, TrainConfig
+from repro.data.synthetic import SyntheticTokens
+from repro.runtime.trainer import Trainer
+
+# tight enough that swap policies really generate (reduced-llama2 baseline
+# peak is ~12 MiB at seq 64: 20 MiB fits baseline, 8 MiB forces ~18 swap
+# entries per policy, so reuse exercises the §6.1 matching path)
+BUDGET = 8 << 20
+
+
+def _trainer(store_dir: Optional[str], ckdir: str, *, cfg=None, steps=40,
+             eval_every=0, seq=64, batch=4, seed=0) -> Trainer:
+    cfg = cfg or C.get_reduced("llama2_paper")
+    tcfg = TrainConfig(steps=steps, checkpoint_every=0, checkpoint_dir=ckdir,
+                       eval_every=eval_every, warmup_steps=2,
+                       learning_rate=1e-3)
+    cham = ChameleonConfig(
+        enabled=True, hbm_budget_bytes=BUDGET,
+        policystore=PolicyStoreConfig(enabled=store_dir is not None,
+                                      dir=store_dir or ""))
+    data = SyntheticTokens(cfg.vocab_size, seq, batch, seed=seed)
+    return Trainer(cfg, tcfg, cham, data=data)
+
+
+def _tiers(tr: Trainer) -> str:
+    ps = tr.rt.policystore_stats()
+    if ps is None:
+        return "off"
+    t = ps["tiers"]
+    return (f"reuse:{t['reuse']}/warm:{t['warm_start']}"
+            f"/regen:{t['regen']}/dem:{t['demoted']}")
+
+
+def _recovery_steps(tr: Trainer) -> float:
+    """Mean steps from a sequence change back to Stable."""
+    a = tr.rt.adaptations
+    return float(np.mean([d["steps"] for d in a])) if a else 0.0
+
+
+def run(iters: int = 1) -> List[tuple]:
+    rows: List[tuple] = []
+    dirs: List[str] = []
+
+    def mk() -> str:
+        d = tempfile.mkdtemp()
+        dirs.append(d)
+        return d
+
+    try:
+        # ---- recur: train -> eval -> train interleave -----------------
+        store = mk()
+        tr_on = _trainer(store, mk(), steps=40, eval_every=13)
+        rep_on = tr_on.train(40)
+        tr_off = _trainer(None, mk(), steps=40, eval_every=13)
+        rep_off = tr_off.train(40)
+        t_step = float(np.median(rep_on.times[5:]))
+        rows.append((
+            "adapt.recur", t_step,
+            f"genpolicy_on={rep_on.genpolicy_steps};genpolicy_off={rep_off.genpolicy_steps};"
+            f"recovery_on={_recovery_steps(tr_on):.1f};"
+            f"recovery_off={_recovery_steps(tr_off):.1f};"
+            f"tiers={_tiers(tr_on)}"))
+
+        # ---- cold restart against the warm on-disk store --------------
+        tr_cold = _trainer(store, mk(), steps=8)
+        rep_cold = tr_cold.train(8)
+        rows.append((
+            "adapt.cold_restart", float(np.median(rep_cold.times)),
+            f"genpolicy={rep_cold.genpolicy_steps};stages={sorted(set(rep_cold.stages))};"
+            f"tiers={_tiers(tr_cold)} (bar: genpolicy=0)"))
+
+        # ---- seq-len bucket cycling ------------------------------------
+        # period must exceed one cold adaptation (m warmup + n genpolicy
+        # steps) or nothing ever finishes and gets stored
+        def cycle_hook(tr: Trainer, period: int = 12):
+            cfg = tr.cfg
+            buckets = [SyntheticTokens(cfg.vocab_size, 64, 4, seed=0),
+                       SyntheticTokens(cfg.vocab_size, 96, 4, seed=1)]
+
+            def hook(step: int):
+                if (step + 1) % period == 0:
+                    tr.data = buckets[((step + 1) // period) % 2]
+            return hook
+
+        store2 = mk()
+        tr2_on = _trainer(store2, mk(), steps=48)
+        rep2_on = tr2_on.train(48, fault_hook=cycle_hook(tr2_on))
+        tr2_off = _trainer(None, mk(), steps=48)
+        rep2_off = tr2_off.train(48, fault_hook=cycle_hook(tr2_off))
+        rows.append((
+            "adapt.seqlen_cycle", float(np.median(rep2_on.times[5:])),
+            f"genpolicy_on={rep2_on.genpolicy_steps};genpolicy_off={rep2_off.genpolicy_steps};"
+            f"recovery_on={_recovery_steps(tr2_on):.1f};"
+            f"recovery_off={_recovery_steps(tr2_off):.1f};"
+            f"tiers={_tiers(tr2_on)}"))
+
+        # ---- layer-count change (must NOT reuse across it) -------------
+        store3 = mk()
+        tr3a = _trainer(store3, mk(), steps=14)
+        tr3a.train(14)
+        deeper = C.get_reduced("llama2_paper").replace(num_layers=6)
+        tr3b = _trainer(store3, mk(), cfg=deeper, steps=14)
+        rep3b = tr3b.train(14)
+        rows.append((
+            "adapt.layer_change", float(np.median(rep3b.times[5:])),
+            f"genpolicy_after_change={rep3b.genpolicy_steps};tiers={_tiers(tr3b)} "
+            f"(bar: no reuse hit)"))
+
+        # ---- MoE expert-count change -----------------------------------
+        moe = C.get_reduced("granite_moe_1b_a400m")
+        store4 = mk()
+        tr4a = _trainer(store4, mk(), cfg=moe, steps=12)
+        tr4a.train(12)
+        moe2 = moe.replace(num_experts=2 * moe.num_experts)
+        tr4b = _trainer(store4, mk(), cfg=moe2, steps=12)
+        rep4b = tr4b.train(12)
+        rows.append((
+            "adapt.moe_experts", float(np.median(rep4b.times[5:])),
+            f"genpolicy_after_change={rep4b.genpolicy_steps};tiers={_tiers(tr4b)}"))
+    finally:
+        for d in dirs:
+            shutil.rmtree(d, ignore_errors=True)
+    return rows

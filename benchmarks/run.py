@@ -16,6 +16,8 @@ MODULES = [
     "fig7_stability",
     "fig8_reuse_interval",
     "hostmem_bench",
+    "adapt_bench",
+    "serving_bench",
     "kernels_bench",
     "roofline",
 ]

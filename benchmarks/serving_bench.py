@@ -1,0 +1,61 @@
+"""Serving throughput under over-subscription vs queueing (ROADMAP item).
+
+The same request load is pushed through the slot server twice:
+
+  * **queueing** — admission capped at the HBM-resident slot count
+    (``max_active == max_batch``): excess requests wait in the queue;
+  * **over-subscription** — ``max_active > max_batch`` with the host
+    tier: excess requests are admitted immediately and preempted decode
+    state parks in the pinned pool.
+
+Derived columns come from ``Server.latency_stats()`` (tick-level
+batching log): token throughput, slot occupancy, per-tick latency
+percentiles, and per-request queue-wait / completion percentiles — the
+trade over-subscription makes is queue-wait for spill traffic.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models.registry import get_api
+from repro.runtime.server import Server
+
+MAX_BATCH = 2
+N_REQUESTS = 8
+NEW_TOKENS = 8
+
+
+def _load(srv: Server) -> None:
+    rng = np.random.RandomState(0)
+    for _ in range(N_REQUESTS):
+        srv.submit(rng.randint(0, srv.cfg.vocab_size, size=rng.randint(4, 12)),
+                   max_new_tokens=NEW_TOKENS)
+
+
+def run(iters: int = 1) -> List[tuple]:
+    cfg = C.get_reduced("llama2_paper")
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.PRNGKey(0))
+    rows: List[tuple] = []
+    for mode, max_active in (("queueing", MAX_BATCH),
+                             ("oversub", 2 * MAX_BATCH)):
+        srv = Server(cfg, params, max_batch=MAX_BATCH, max_len=64,
+                     max_active=max_active)
+        _load(srv)
+        srv.run_until_done(max_ticks=2000)
+        lat = srv.latency_stats()
+        t_tick = lat["tick_ms"]["p50"] * 1e-3
+        rows.append((
+            f"serving.{mode}", t_tick,
+            f"tok_per_s={lat['tokens_per_s']:.1f};"
+            f"tok_per_tick={lat['tokens_per_tick']:.2f};"
+            f"occupancy={lat['slot_occupancy']:.2f};"
+            f"tick_p95_ms={lat['tick_ms']['p95']:.1f};"
+            f"queue_wait_p95={lat['queue_wait_ticks']['p95']:.0f};"
+            f"completion_p95={lat['completion_ticks']['p95']:.0f};"
+            f"preemptions={srv.n_preemptions}"))
+    return rows

@@ -225,6 +225,12 @@ class HostMemConfig:
     pool_bytes: int = 0                          # 0 -> uncapped host pool
     min_class_bytes: int = 1 << 12               # smallest slab size class
     engine_depth: int = 2                        # in-flight copies (double buffer)
+    # KV-spill payload compression across the host link: "none" keeps the
+    # bit-exact raw path; "int8" routes float decode-state rows through the
+    # quant_offload kernels (row-wise symmetric int8 + f32 scales), 2-4x
+    # fewer staged bytes at <=0.4% per-row error
+    spill_compression: str = "none"              # none | int8
+    spill_compress_min_bytes: int = 1 << 12      # rows below stay raw
     # per-traffic-class depth overrides, e.g. (("checkpoint", 16),) lets a
     # whole checkpoint drain queue without forcing early retires
     class_depths: Tuple[Tuple[str, int], ...] = ()
@@ -235,6 +241,35 @@ class HostMemConfig:
     calibrate: bool = False                      # measure the link at startup
     calibration_sizes: Tuple[int, ...] = HOSTMEM_CALIBRATION_SIZES
     calibration_iters: int = 3
+
+
+@dataclass(frozen=True)
+class PolicyStoreConfig:
+    """Persistent policy cache (repro.policystore): fingerprint-keyed
+    store of generated SwapPolicies with a three-tier drift response
+    (reuse / warm-start / regen).  ``dir=""`` keeps the store in-memory
+    only; a directory makes policies survive process restarts."""
+    enabled: bool = True
+    dir: str = ""                                # "" -> memory-only store
+    max_records: int = 64                        # LRU capacity (memory + disk)
+    # calibrated-similarity tier thresholds (see policystore.drift)
+    reuse_threshold: float = 0.90
+    warm_threshold: float = 0.55
+    # length-ratio gates: layer-count/model changes rescale the stream but
+    # keep its shingle set, so tiers also require a length match
+    reuse_len_ratio: float = 0.95
+    warm_len_ratio: float = 0.60
+    # REUSE only applies if fuzzy matching re-associates at least this
+    # fraction of the cached entries onto the new program
+    min_reuse_hit_rate: float = 0.60
+    # REUSE is capped at WARM_START when the live bandwidth curve drifted
+    # beyond this factor from the record's snapshot at any measured size
+    # (only enforced once the live model is calibrated; loose enough that
+    # online-EMA jitter does not trip it)
+    bw_drift_limit: float = 4.0
+    # fingerprint sketch parameters
+    minhash_perms: int = 64
+    shingle: int = 4
 
 
 @dataclass(frozen=True)
@@ -254,6 +289,7 @@ class ChameleonConfig:
     peak_flops: float = 197e12                   # v5e bf16
     hbm_gbps: float = 819.0
     hostmem: HostMemConfig = HostMemConfig()     # host-memory tier (repro.hostmem)
+    policystore: PolicyStoreConfig = PolicyStoreConfig()  # repro.policystore
 
 
 @dataclass(frozen=True)

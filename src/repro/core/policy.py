@@ -88,6 +88,32 @@ class SwapPolicy:
                 f"stall {self.stall_time * 1e3:.1f} ms")
 
 
+def projected_peak(prof: ProfileData, entries: List[PolicyEntry]) -> int:
+    """Dynamic-memory peak with the swapped tensors absent between
+    swap-out completion and swap-in pre-trigger (timeline replay).  Used
+    both for a freshly generated policy and to re-verify a cached policy
+    remapped onto a new program (repro.policystore reuse tier)."""
+    n = prof.n_ops
+    delta = np.zeros(n + 2, np.int64)
+    by_uid = {e.uid: e for e in entries}
+    for t in prof.tensors:
+        b = min(max(t.birth, 0), n)
+        d = min(max(t.death, b), n + 1)
+        e = by_uid.get(t.uid)
+        if e is not None:
+            out = min(max(e.swap_out_done_op, b), d)
+            back = min(max(e.swap_in_op, out), d)
+            delta[b] += t.nbytes
+            delta[out] -= t.nbytes
+            delta[back] += t.nbytes
+            delta[d] -= t.nbytes
+        else:
+            delta[b] += t.nbytes
+            delta[d] -= t.nbytes
+    usage = np.cumsum(delta)[: n + 1]
+    return int(usage.max(initial=0)) + prof.static_bytes
+
+
 def generate_policy(prof: ProfileData, cfg: ChameleonConfig,
                     budget: Optional[int] = None,
                     timeline: Optional[MemoryTimeline] = None,
@@ -118,30 +144,10 @@ def generate_policy(prof: ProfileData, cfg: ChameleonConfig,
 
     sim.set_free_time(entries)                      # Algo 2 line 11 (§5.4.2)
 
-    # projected peak: replay the timeline with swapped tensors absent
-    # between swap-out completion and swap-in pre-trigger.
-    n = prof.n_ops
-    delta = np.zeros(n + 2, np.int64)
-    by_uid = {e.uid: e for e in entries}
-    for t in prof.tensors:
-        b = min(max(t.birth, 0), n)
-        d = min(max(t.death, b), n + 1)
-        e = by_uid.get(t.uid)
-        if e is not None:
-            out = min(max(e.swap_out_done_op, b), d)
-            back = min(max(e.swap_in_op, out), d)
-            delta[b] += t.nbytes
-            delta[out] -= t.nbytes
-            delta[back] += t.nbytes
-            delta[d] -= t.nbytes
-        else:
-            delta[b] += t.nbytes
-            delta[d] -= t.nbytes
-    usage = np.cumsum(delta)[: n + 1]
-    projected = int(usage.max(initial=0)) + prof.static_bytes
+    projected = projected_peak(prof, entries)
 
     pol = SwapPolicy(entries, projected, tl.peak, budget,
-                     sim.stall_time, prof.t_iter, n,
+                     sim.stall_time, prof.t_iter, prof.n_ops,
                      contention_s=sim.contention_s)
     if engine is not None and register_free_times:  # hostmem free-time hand-off
         pol.register_free_times(engine)

@@ -19,6 +19,7 @@ and selects the one with the best runtime performance".
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -28,11 +29,15 @@ import numpy as np
 from repro.common.config import ChameleonConfig
 from repro.core import tokenizer
 from repro.core.executor import AppliedPolicy, Executor
+from repro.core.matching import remap_policy
 from repro.core.memtrace import build_timeline
 from repro.core.oom import warmup_offload_sites
-from repro.core.policy import ChameleonOOMError, SwapPolicy, generate_policy
+from repro.core.policy import (ChameleonOOMError, SwapPolicy,
+                               generate_policy, projected_peak)
 from repro.core.profiler import ProfileData, profile_jaxpr
 from repro.core.stages import Stage, StageMachine
+from repro.policystore import (DriftClassifier, PolicyRecord, PolicyStore,
+                               Tier, fingerprint_profile, fingerprint_tokens)
 
 # grouping knobs tried across the n GenPolicy steps (variant selection)
 VARIANT_KNOBS = (1.0, 2.0, 0.5, 4.0, 0.25)
@@ -73,7 +78,24 @@ class ChameleonRuntime:
         self.best: Optional[PolicyVariant] = None
         self.step_idx = 0
         self.history: List[dict] = []
-        self.profiling_overhead_s = 0.0
+        self.profiling_overhead_s = 0.0      # steady-state Lightweight mode
+        self.adaptation_overhead_s = 0.0     # episodic (GenPolicy/store/fit)
+        # ---- policystore: persistent fingerprint-keyed adaptation cache
+        self.store: Optional[PolicyStore] = None
+        self.drift: Optional[DriftClassifier] = None
+        if cfg.enabled and cfg.policystore.enabled:
+            self.store = PolicyStore(cfg.policystore)
+            self.drift = DriftClassifier(cfg.policystore)
+        self._gen_knobs: Tuple[float, ...] = VARIANT_KNOBS
+        self._last_sig: Optional[np.ndarray] = None
+        # dispatch-shape drift: same primitives, different memory profile
+        # (seq-len bucket cycling) — invisible to the token stream, so the
+        # runtime tracks the train dispatch's arg shapes itself
+        self._train_shape: Optional[Tuple] = None
+        self._prev_train_shape: Optional[Tuple] = None
+        self._last_decision = None           # DriftDecision of this adaptation
+        self._adapt_mark: Optional[Tuple[int, float]] = None
+        self.adaptations: List[dict] = []
 
     # ------------------------------------------------------------ helpers
     def _args_key(self, args) -> Tuple:
@@ -103,14 +125,21 @@ class ChameleonRuntime:
     # -------------------------------------------------------------- setup
     def prepare(self, example_args: tuple) -> AppliedPolicy:
         """WarmUp entry: proactive Algo-3 fit so the first iterations never
-        OOM while profiling data accumulates."""
+        OOM while profiling data accumulates.  With a policy store attached
+        the observed program is fingerprinted first: a reuse-tier hit
+        applies the cached policy directly (no WarmUp wait, no GenPolicy),
+        a warm-start hit seeds the upcoming variant search."""
         self._example_args = example_args
         if not self.cfg.enabled:
             return self.applied
+        if self._adapt_mark is None:
+            self._adapt_mark = (self.step_idx, time.perf_counter())
         cj = self._baseline_jaxpr(example_args)
         prof = profile_jaxpr(cj, t_iter=1.0)   # timing unknown pre-run; the
         self.baseline_profile = prof           # warm-up fit is memory-only
         tl = build_timeline(prof)
+        if self.store is not None and self._try_policystore(prof, tl):
+            return self.applied                # reuse tier: cached policy
         if tl.peak > self.budget:
             try:
                 sites = warmup_offload_sites(prof, self.cfg, self.budget)
@@ -123,6 +152,135 @@ class ChameleonRuntime:
         else:
             self.applied = self.executor.baseline()
         return self.applied
+
+    # ------------------------------------------- policystore (repro.policystore)
+    def _fingerprint(self, prof: ProfileData):
+        ps = self.cfg.policystore
+        return fingerprint_profile(prof, n_perms=ps.minhash_perms,
+                                   shingle=ps.shingle)
+
+    def _try_policystore(self, prof: ProfileData, tl) -> bool:
+        """Classify the observed program against the store.  Returns True
+        when a reuse-tier hit applied a cached policy (callers skip the
+        WarmUp fit); warm-start/regen configure the variant search and
+        return False."""
+        fp = self._fingerprint(prof)
+        decision = self.drift.classify(
+            fp, self.store, budget=self.budget,
+            bwmodel=self.hostmem.bwmodel if self.hostmem else None)
+        if decision.tier is Tier.REUSE:
+            # identity must be a hash test, not a float threshold: blended
+            # similarity is capped below 1.0 for unequal hashes, but hash
+            # equality is the authoritative check either way
+            rec = decision.record
+            exact = rec is not None and fp.exact in (
+                rec.prepare_fingerprint.exact, rec.fingerprint.exact)
+            applied = self._apply_cached(rec, prof, tl, exact_hit=exact)
+            if applied is not None:
+                self._last_decision = decision
+                self.applied = applied
+                self.store.touch(decision.record)
+                self.machine.force_stable(self.step_idx, "policystore-reuse")
+                self.machine.n_genpolicy = None
+                self._gen_knobs = VARIANT_KNOBS
+                self._finish_adaptation("reuse")
+                return True
+            decision = self.drift.demote(decision, "match-miss")
+        self._last_decision = decision
+        if decision.tier is Tier.WARM_START and decision.record is not None:
+            # seed the search from the cached winner + one alternative;
+            # converges in 1-2 GenPolicy steps instead of five (§7.1)
+            seed = decision.record.knob
+            alt = next((k for k in VARIANT_KNOBS if k != seed),
+                       VARIANT_KNOBS[0])
+            self._gen_knobs = (seed, alt)
+            self.machine.n_genpolicy = len(self._gen_knobs) - 1
+        else:
+            self._gen_knobs = VARIANT_KNOBS
+            self.machine.n_genpolicy = None
+        return False
+
+    def _apply_cached(self, record: PolicyRecord, prof: ProfileData,
+                      tl, exact_hit: bool = False) -> Optional[AppliedPolicy]:
+        """Re-associate a cached policy with the observed program (§6.1
+        fuzzy matching) and lower it.  None -> the record does not carry
+        over (low match hit-rate, or a cached no-swap decision that no
+        longer fits) and the caller falls back a tier."""
+        swap = record.swap_policy()
+        if swap is None:
+            if record.policy_kind == "conservative":
+                # the winner was the offload-all fallback: guaranteed to
+                # fit by construction, but it carries no remappable
+                # evidence — only the *identical* program may reuse it
+                # (a merely similar one, e.g. another seq-len bucket,
+                # would otherwise be pinned to the slow fallback forever
+                # without ever running its own variant search)
+                return self.executor.conservative(prof) if exact_hit else None
+            # cached adaptation concluded the baseline fits — verify that
+            # still holds for the observed program before trusting it
+            if tl.peak > self.budget:
+                return None
+            return self.executor.baseline()
+        entries, hit = remap_policy(swap, record.profile_stub(), prof)
+        if not entries or hit < self.cfg.policystore.min_reuse_hit_rate:
+            return None
+        # a partially remapped schedule offloads fewer bytes than the one
+        # that was priced to fit — re-verify against the observed timeline
+        # before trusting it (same guard as the cached-baseline path)
+        projected = projected_peak(prof, entries)
+        if projected > self.budget:
+            return None
+        new_swap = dataclasses.replace(swap, entries=entries,
+                                       projected_peak=projected,
+                                       baseline_peak=tl.peak,
+                                       budget=self.budget)
+        applied = self.executor.lower(new_swap, prof)
+        self.profile = prof
+        if self.hostmem is not None:
+            self.executor.bind_release_points(applied, self.hostmem.engine)
+            self.hostmem.engine.begin_iteration()
+        return applied
+
+    def _store_result(self) -> None:
+        """Write the adaptation winner back to the store, keyed by the
+        profiled train-step stream (cold-start exact hit) and carrying the
+        full iteration signature (mid-run drift similarity)."""
+        if self.store is None or self.best is None or self.profile is None:
+            return
+        prof = self.profile
+        ps = self.cfg.policystore
+        prep_fp = self._fingerprint(prof)
+        if self._last_sig is not None and len(self._last_sig):
+            iter_fp = fingerprint_tokens(self._last_sig,
+                                         n_perms=ps.minhash_perms,
+                                         shingle=ps.shingle)
+        else:
+            iter_fp = prep_fp
+        kind = ("swap" if self.best.swap is not None
+                else "conservative" if self.best.applied.offload
+                else "baseline")
+        self.store.put(PolicyRecord.from_policy(
+            fingerprint=iter_fp, prepare_fingerprint=prep_fp,
+            swap=self.best.swap, candidates=prof.candidates,
+            n_ops=prof.n_ops, knob=self.best.knob,
+            measured_t=self.best.measured_t or 0.0, budget=self.budget,
+            bwmodel=self.hostmem.bwmodel if self.hostmem else None,
+            policy_kind=kind))
+
+    def _finish_adaptation(self, tier: str) -> None:
+        """Close the adaptation-latency window opened by ``prepare``."""
+        if self._adapt_mark is None:
+            return
+        start_step, t0 = self._adapt_mark
+        self._adapt_mark = None
+        self.adaptations.append({
+            "trigger_step": start_step,
+            "end_step": self.step_idx,
+            "steps": self.step_idx - start_step,
+            "seconds": time.perf_counter() - t0,
+            "tier": tier,
+            "genpolicy_steps": len(self.variants),
+        })
 
     # ------------------------------------------------------ per-iteration
     def step_fn(self) -> Callable:
@@ -146,6 +304,7 @@ class ChameleonRuntime:
         self._iter_streams.append(toks)
         if name == "train":
             self._last_train_args = args
+            self._train_shape = key[2:]           # arg shapes/dtypes only
         self.profiling_overhead_s += time.perf_counter() - t0
 
     def end_iteration(self, t_iter: float) -> Stage:
@@ -155,8 +314,20 @@ class ChameleonRuntime:
         ran = self.applied
         sig = tokenizer.sequence_signature(self._iter_streams)
         self._iter_streams = []
+        self._last_sig = sig
         prev_stage = self.machine.stage
         stage = self.machine.observe(sig, self.step_idx)
+        # shape drift (same op stream, different shapes -> different memory
+        # profile): Algo 1 cannot see it, so re-enter WarmUp ourselves; the
+        # policystore keys buckets separately (per-site byte aggregates) so
+        # a recurring bucket reuses its own cached policy
+        shape_drift = (self.cfg.enabled
+                       and self._prev_train_shape is not None
+                       and self._train_shape is not None
+                       and self._train_shape != self._prev_train_shape)
+        if shape_drift and stage is not Stage.WARMUP:
+            stage = self.machine.to_warmup(self.step_idx, "shape-change")
+        self._prev_train_shape = self._train_shape
         self.step_idx += 1
 
         # a variant ran this iteration: record its measured time
@@ -164,17 +335,28 @@ class ChameleonRuntime:
             self._pending_variant.measured_t = t_iter
             self._pending_variant = None
 
+        # episodic adaptation work (Detailed profiling, variant selection,
+        # policystore write/lookup, re-prepare) is accounted separately
+        # from the steady-state Lightweight-mode bookkeeping: the paper's
+        # Table-1 overhead claim is per-iteration, adaptation is what
+        # benchmarks/adapt_bench.py measures
+        t_adapt = time.perf_counter()
         if stage is Stage.GENPOLICY:
             self._genpolicy_step(t_iter)
         elif stage is Stage.STABLE and prev_stage is Stage.GENPOLICY:
             self._select_best()
-        elif stage is Stage.WARMUP and prev_stage is not Stage.WARMUP:
-            # sequence changed: back to the conservative fit (Fig 2 loop)
+        elif stage is Stage.WARMUP and (prev_stage is not Stage.WARMUP
+                                        or shape_drift):
+            # sequence (or dispatch shape) changed: back to the
+            # conservative fit (Fig 2 loop) — shape drift re-prepares even
+            # when observe() left the machine in/through WarmUp this step
             self.variants, self.best = [], None
             if self._example_args is not None:
                 args = getattr(self, "_last_train_args", self._example_args)
                 self._jaxpr_cache.clear()
                 self.prepare(args)
+        adapt_dt = time.perf_counter() - t_adapt
+        self.adaptation_overhead_s += adapt_dt
         # §5.4.2 execution feedback for the policy that just ran: mirror
         # its swap schedule through the engine (real policy_swap-class
         # copies, released by advance_op at each promised op), then sweep
@@ -189,7 +371,7 @@ class ChameleonRuntime:
         self.history.append({"step": self.step_idx, "stage": stage.value,
                              "policy": self.applied.fingerprint,
                              "t_iter": t_iter})
-        self.profiling_overhead_s += time.perf_counter() - t0
+        self.profiling_overhead_s += (time.perf_counter() - t0) - adapt_dt
         return stage
 
     # --------------------------------------- §5.4.2 applied-swap traffic
@@ -239,8 +421,7 @@ class ChameleonRuntime:
         cj = self._baseline_jaxpr(args)
         prof = profile_jaxpr(cj, t_iter=t_iter)   # Detailed mode
         self.profile = prof
-        import dataclasses
-        knob = VARIANT_KNOBS[len(self.variants) % len(VARIANT_KNOBS)]
+        knob = self._gen_knobs[len(self.variants) % len(self._gen_knobs)]
         groups = max(1, int((prof.scan_layers or 32) * knob))
         cfg_v = dataclasses.replace(self.cfg, groups_per_phase=groups)
         tl = build_timeline(prof)
@@ -269,22 +450,33 @@ class ChameleonRuntime:
     def _select_best(self) -> None:
         timed = [v for v in self.variants if v.measured_t is not None]
         if timed:
-            self.best = min(timed, key=lambda v: v.measured_t)
-            self.applied = self.best.applied
-            if self.hostmem is not None and self.best.swap is not None:
-                # §5.4.2 hand-off: only the applied policy's release points
-                # reach the engine; end_iteration drives engine.advance_op
-                # over them so swapped buffers are freed at the promised op
-                # instead of at first reuse.  (Rebuilt here rather than
-                # trusted from Executor.lower: variants may carry an
-                # applied policy constructed elsewhere.)
-                self.applied.release_plan = {
-                    SwapPolicy.entry_tag(e): e.swap_out_done_op
-                    for e in self.best.swap.entries
-                    if e.swap_out_done_op >= 0}
-                self.executor.bind_release_points(self.applied,
-                                                  self.hostmem.engine)
-                self.hostmem.engine.begin_iteration()
+            self._select_best_timed(timed)
+        tier = (self._last_decision.tier.value
+                if self._last_decision is not None else Tier.REGEN.value)
+        self._finish_adaptation(tier)
+        self._last_decision = None
+        self._gen_knobs = VARIANT_KNOBS        # next adaptation starts cold
+        self.machine.n_genpolicy = None
+        if timed:
+            self._store_result()
+
+    def _select_best_timed(self, timed: List[PolicyVariant]) -> None:
+        self.best = min(timed, key=lambda v: v.measured_t)
+        self.applied = self.best.applied
+        if self.hostmem is not None and self.best.swap is not None:
+            # §5.4.2 hand-off: only the applied policy's release points
+            # reach the engine; end_iteration drives engine.advance_op
+            # over them so swapped buffers are freed at the promised op
+            # instead of at first reuse.  (Rebuilt here rather than
+            # trusted from Executor.lower: variants may carry an
+            # applied policy constructed elsewhere.)
+            self.applied.release_plan = {
+                SwapPolicy.entry_tag(e): e.swap_out_done_op
+                for e in self.best.swap.entries
+                if e.swap_out_done_op >= 0}
+            self.executor.bind_release_points(self.applied,
+                                              self.hostmem.engine)
+            self.hostmem.engine.begin_iteration()
 
     # ----------------------------------------------------------- reports
     def stats(self) -> dict:
@@ -298,5 +490,19 @@ class ChameleonRuntime:
             "contention_s": (self.best.swap.contention_s
                              if self.best and self.best.swap else 0.0),
             "profiling_overhead_s": self.profiling_overhead_s,
+            "adaptation_overhead_s": self.adaptation_overhead_s,
             "hostmem": self.hostmem.stats() if self.hostmem else None,
+            "policystore": self.policystore_stats(),
+        }
+
+    def policystore_stats(self) -> Optional[dict]:
+        """Per-tier hit counters, store state, and adaptation latencies."""
+        if self.store is None:
+            return None
+        gp = sum(1 for h in self.history if h["stage"] == Stage.GENPOLICY.value)
+        return {
+            "store": self.store.stats(),
+            "tiers": self.drift.stats(),
+            "adaptations": list(self.adaptations),
+            "genpolicy_steps_total": gp,
         }

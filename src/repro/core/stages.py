@@ -31,14 +31,20 @@ class StageMachine:
     stable_step: int = 0
     prev_seq: Optional[np.ndarray] = None
     transitions: list = field(default_factory=list)
+    # per-adaptation override of Algo 1's `n` (None -> cfg value): a
+    # policystore warm start shrinks the GenPolicy variant search to the
+    # seeded knobs instead of the full five
+    n_genpolicy: Optional[int] = None
 
     def observe(self, op_seq: np.ndarray, step: int = -1) -> Stage:
         """Algo 1: feed one iteration's operator sequence."""
         if self.prev_seq is None:
             self.prev_seq = op_seq
-            self._log(step, "init", Stage.WARMUP)
+            self._log(step, "init", self.stage)
             return self.stage
 
+        n_gen = (self.n_genpolicy if self.n_genpolicy is not None
+                 else self.cfg.n_genpolicy_steps)
         len_diff, cos = similarity(op_seq, self.prev_seq)
         stable = (len_diff < self.cfg.len_change_threshold
                   and cos > self.cfg.cos_sim_threshold)
@@ -48,13 +54,33 @@ class StageMachine:
             if prev_stage is Stage.WARMUP and self.stable_step > self.cfg.m_warmup_stable:
                 self.stage, self.stable_step = Stage.GENPOLICY, 0
             elif (prev_stage is Stage.GENPOLICY
-                  and self.stable_step > self.cfg.n_genpolicy_steps):
+                  and self.stable_step > n_gen):
                 self.stage = Stage.STABLE
         else:
             self.stage, self.stable_step = Stage.WARMUP, 0
         if self.stage is not prev_stage:
             self._log(step, "stable" if stable else "seq-change", self.stage)
         self.prev_seq = op_seq
+        return self.stage
+
+    def to_warmup(self, step: int = -1, why: str = "shape-change") -> Stage:
+        """Out-of-band reset: the runtime saw drift the token stream
+        cannot express (e.g. a dispatch-shape change — same primitives,
+        different memory profile) and restarts adaptation."""
+        prev = self.stage
+        self.stage, self.stable_step = Stage.WARMUP, 0
+        if prev is not Stage.WARMUP:
+            self._log(step, why, self.stage)
+        return self.stage
+
+    def force_stable(self, step: int = -1, why: str = "forced") -> Stage:
+        """Jump straight to Stable: the policystore's reuse tier applied a
+        cached policy, so neither the WarmUp wait nor GenPolicy is needed
+        for this adaptation."""
+        prev = self.stage
+        self.stage, self.stable_step = Stage.STABLE, 0
+        if prev is not Stage.STABLE:
+            self._log(step, why, self.stage)
         return self.stage
 
     @property

@@ -45,7 +45,10 @@ class HostMemTier:
         self.engine = TransferEngine(self.pool, depth=self.cfg.engine_depth,
                                      bwmodel=self.bwmodel,
                                      class_depths=dict(self.cfg.class_depths))
-        self.kvspill = KVSpillManager(self.pool, self.engine)
+        self.kvspill = KVSpillManager(
+            self.pool, self.engine,
+            compression=self.cfg.spill_compression,
+            compress_min_bytes=self.cfg.spill_compress_min_bytes)
         if self.cfg.calibrate:
             self.calibrate()
 

@@ -26,11 +26,19 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--calibrate-link", action="store_true",
                     help="measure the host link before serving")
+    ap.add_argument("--spill-compression", choices=["none", "int8"],
+                    default="none",
+                    help="int8: KV spill crosses the link row-quantized "
+                         "(2-4x fewer bytes, <=0.4%% per-row error)")
+    ap.add_argument("--policy-store-dir", default="",
+                    help="attach the shared adaptation cache (read-only "
+                         "visibility: cache warmth is reported in stats)")
     args = ap.parse_args()
 
     import jax
     import numpy as np
     import repro.configs as C
+    from repro.common.config import HostMemConfig, PolicyStoreConfig
     from repro.hostmem import HostMemTier
     from repro.models.registry import get_api
     from repro.runtime.server import Server
@@ -40,12 +48,22 @@ def main():
     params, _ = api.init(cfg, jax.random.PRNGKey(0))
     max_active = args.max_active or args.max_batch
     hostmem = None
-    if max_active > args.max_batch or args.calibrate_link:
-        hostmem = HostMemTier()
+    if (max_active > args.max_batch or args.calibrate_link
+            or args.spill_compression != "none"):
+        hostmem = HostMemTier(HostMemConfig(
+            spill_compression=args.spill_compression))
         if args.calibrate_link:
             hostmem.calibrate()        # engine-path sweep, not raw device_put
+    policystore = None
+    if args.policy_store_dir:
+        from repro.policystore import PolicyStore
+        # readonly: a shared training store must not lose records to this
+        # reader's load-time eviction
+        policystore = PolicyStore(PolicyStoreConfig(dir=args.policy_store_dir),
+                                  readonly=True)
     srv = Server(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-                 max_active=max_active, hostmem=hostmem)
+                 max_active=max_active, hostmem=hostmem,
+                 policystore=policystore)
     rng = np.random.RandomState(0)
     for _ in range(args.requests):
         srv.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)),
@@ -57,6 +75,11 @@ def main():
     print(f"{len(results)} requests, {toks} tokens, {dt:.2f}s, "
           f"{toks / dt:.1f} tok/s, {srv.ticks} ticks, "
           f"{srv.n_preemptions} preemptions")
+    lat = srv.latency_stats()
+    print(f"tick p50 {lat['tick_ms']['p50']:.1f} ms / "
+          f"p95 {lat['tick_ms']['p95']:.1f} ms, "
+          f"occupancy {lat['slot_occupancy']:.1%}, "
+          f"queue-wait p95 {lat['queue_wait_ticks']['p95']:.0f} ticks")
     if hostmem is not None:
         print(hostmem.summary())          # includes per-traffic-class lines
         kv = srv.stats()["kv_spill_class"]
@@ -65,6 +88,14 @@ def main():
                   f"{kv['n_in']} restored, "
                   f"stalled {kv['stall_s'] * 1e3:.1f} ms behind "
                   f"higher-priority traffic")
+        ks = hostmem.kvspill.stats()
+        if ks["compression"] != "none" and ks["n_spills"]:
+            print(f"spill compression ({ks['compression']}): "
+                  f"{ks['bytes_raw'] / 2**20:.1f} MiB raw -> "
+                  f"{ks['bytes_spilled'] / 2**20:.1f} MiB staged "
+                  f"({ks['compression_ratio']:.2f}x)")
+    if policystore is not None:
+        print(f"policystore: {policystore.stats()}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,12 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--budget-gib", type=float, default=16.0)
     ap.add_argument("--no-chameleon", action="store_true")
+    ap.add_argument("--policy-store-dir", default="",
+                    help="persist adaptation policies here (fingerprint-"
+                         "keyed; a restart with a warm store skips "
+                         "GenPolicy for recurring sequences)")
+    ap.add_argument("--no-policy-store", action="store_true",
+                    help="disable the in-memory policy cache too")
     ap.add_argument("--multihost", action="store_true",
                     help="initialize jax.distributed from env")
     ap.add_argument("--mesh", choices=["none", "single", "multi"],
@@ -40,7 +46,8 @@ def main():
 
     import jax
     import repro.configs as C
-    from repro.common.config import ChameleonConfig, TrainConfig
+    from repro.common.config import (ChameleonConfig, PolicyStoreConfig,
+                                     TrainConfig)
     from repro.data.synthetic import SyntheticTokens
     from repro.launch.mesh import make_production_mesh
     from repro.runtime.trainer import Trainer
@@ -52,7 +59,10 @@ def main():
                        checkpoint_every=max(args.steps // 4, 1),
                        eval_every=max(args.steps // 3, 1))
     cham = ChameleonConfig(enabled=not args.no_chameleon,
-                           hbm_budget_bytes=int(args.budget_gib * 2 ** 30))
+                           hbm_budget_bytes=int(args.budget_gib * 2 ** 30),
+                           policystore=PolicyStoreConfig(
+                               enabled=not args.no_policy_store,
+                               dir=args.policy_store_dir))
     mesh = None
     if args.mesh != "none":
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
@@ -67,6 +77,15 @@ def main():
         print(f"done: loss {rep.losses[0]:.3f} -> {rep.losses[-1]:.3f}; "
               f"stages={set(rep.stages)}; "
               f"chameleon={tr.rt.stats()['applied'][:60]}")
+        ps = rep.policystore
+        if ps is not None:
+            t, s = ps["tiers"], ps["store"]
+            print(f"policystore: {s['records']} records "
+                  f"({s['dir'] or 'memory-only'}); tiers "
+                  f"reuse={t['reuse']} warm={t['warm_start']} "
+                  f"regen={t['regen']} demoted={t['demoted']}; "
+                  f"genpolicy_steps={ps['genpolicy_steps_total']}; "
+                  f"adaptations={len(ps['adaptations'])}")
     finally:
         data.stop()
 

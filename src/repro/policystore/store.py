@@ -1,0 +1,328 @@
+"""Persistent fingerprint-keyed policy store (repro.policystore).
+
+One :class:`PolicyRecord` is everything a later adaptation needs to avoid
+a cold GenPolicy cycle for a recurring op sequence:
+
+  * the two fingerprints it is reachable by — the **prepare** fingerprint
+    (the profiled train-step stream, exact-hit on process cold start) and
+    the **iteration** fingerprint (the full dispatch-sequence signature,
+    matched by similarity on mid-run drift);
+  * the serialized :class:`~repro.core.policy.SwapPolicy` entries plus
+    the candidate instances of the profile it was generated from (what
+    ``core/matching.py`` needs to re-associate entries with a retraced
+    program);
+  * the winning grouping knob and its measured ``T_iter`` (what seeds a
+    warm-started variant search);
+  * a snapshot of the bandwidth-model curve it was priced under (what
+    the drift guards compare against the live link before trusting the
+    cached schedule).
+
+The :class:`PolicyStore` keeps records in an in-memory LRU and, when a
+directory is configured, mirrors each record to one JSON file
+(``<key>.json``, atomic tmp+rename writes).  Loads are corruption-safe —
+an unreadable or schema-incompatible file is skipped and counted, never
+fatal — and eviction removes the disk file with the memory entry.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.policystore.fingerprint import Fingerprint, similarity
+
+SCHEMA_VERSION = 1
+
+_ENTRY_FIELDS = ("uid", "site", "layer", "nbytes", "birth", "death",
+                 "swap_in_op", "swap_out_done_op", "stalled", "score")
+_CAND_FIELDS = ("uid", "nbytes", "birth", "death", "site", "layer",
+                "dtype_code", "shape", "producer_token")
+
+
+class _ProfileStub:
+    """The slice of ProfileData that ``core.matching`` reads: candidate
+    instances plus the op count (for position bucketing)."""
+
+    def __init__(self, candidates, n_ops: int):
+        self.candidates = candidates
+        self.n_ops = n_ops
+
+
+@dataclass
+class PolicyRecord:
+    key: str                               # prepare-fingerprint exact hash
+    fingerprint: Fingerprint               # iteration-sequence signature
+    prepare_fingerprint: Fingerprint       # profiled train-step stream
+    entries: List[dict] = field(default_factory=list)
+    # what the adaptation winner was: "swap" (entries carry the schedule),
+    # "baseline" (fit without swapping — re-verified against the observed
+    # timeline before reuse), or "conservative" (offload-all fallback —
+    # always safe to reapply)
+    policy_kind: str = "swap"
+    policy_meta: dict = field(default_factory=dict)
+    candidates: List[dict] = field(default_factory=list)
+    n_ops: int = 0
+    knob: float = 1.0
+    measured_t: float = 0.0
+    budget: int = 0
+    bw_constant_gbps: float = 0.0
+    bw_curve: List[Tuple[int, float]] = field(default_factory=list)
+    created: float = 0.0
+    uses: int = 0
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def from_policy(cls, *, fingerprint: Fingerprint,
+                    prepare_fingerprint: Fingerprint, swap, candidates,
+                    n_ops: int, knob: float, measured_t: float, budget: int,
+                    bwmodel=None, policy_kind: str = "swap") -> "PolicyRecord":
+        import numbers
+
+        def _plain(v):
+            if isinstance(v, bool) or v is None or isinstance(v, str):
+                return v
+            if isinstance(v, numbers.Integral):
+                return int(v)           # numpy ints -> JSON-safe
+            return float(v)
+
+        entries = []
+        meta: dict = {}
+        if swap is not None:
+            entries = [{f: _plain(getattr(e, f)) for f in _ENTRY_FIELDS}
+                       for e in swap.entries]
+            meta = {"projected_peak": int(swap.projected_peak),
+                    "baseline_peak": int(swap.baseline_peak),
+                    "budget": int(swap.budget),
+                    "stall_time": float(swap.stall_time),
+                    "t_iter": float(swap.t_iter), "n_ops": int(swap.n_ops),
+                    "contention_s": float(swap.contention_s)}
+        cands = [{f: ([int(d) for d in getattr(t, f)] if f == "shape"
+                      else _plain(getattr(t, f))) for f in _CAND_FIELDS}
+                 for t in candidates]
+        curve: List[Tuple[int, float]] = []
+        gbps = 0.0
+        if bwmodel is not None:
+            curve = [(int(s), float(t)) for s, t, _gbps in bwmodel.curve()]
+            gbps = float(bwmodel.constant_gbps)
+        return cls(key=prepare_fingerprint.exact, fingerprint=fingerprint,
+                   prepare_fingerprint=prepare_fingerprint, entries=entries,
+                   policy_kind=("swap" if entries else policy_kind),
+                   policy_meta=meta, candidates=cands, n_ops=int(n_ops),
+                   knob=float(knob), measured_t=float(measured_t),
+                   budget=int(budget), bw_constant_gbps=gbps,
+                   bw_curve=curve, created=time.time())
+
+    # -------------------------------------------------------- reanimation
+    def swap_policy(self):
+        """Rebuild the stored SwapPolicy (None when the cached adaptation
+        concluded the baseline fits without swapping)."""
+        if not self.entries:
+            return None
+        from repro.core.policy import SwapPolicy
+        from repro.core.simulator import PolicyEntry
+        entries = [PolicyEntry(**{f: e[f] for f in _ENTRY_FIELDS})
+                   for e in self.entries]
+        m = self.policy_meta
+        return SwapPolicy(entries, m.get("projected_peak", 0),
+                          m.get("baseline_peak", 0),
+                          m.get("budget", self.budget),
+                          m.get("stall_time", 0.0), m.get("t_iter", 0.0),
+                          m.get("n_ops", self.n_ops),
+                          contention_s=m.get("contention_s", 0.0))
+
+    def profile_stub(self) -> _ProfileStub:
+        from repro.core.profiler import TensorInstance
+        cands = [TensorInstance(
+            uid=c["uid"], nbytes=c["nbytes"], birth=c["birth"],
+            death=c["death"], site=c["site"], layer=c["layer"],
+            dtype_code=c["dtype_code"], shape=tuple(c["shape"]),
+            producer_token=c.get("producer_token", 0))
+            for c in self.candidates]
+        return _ProfileStub(cands, self.n_ops)
+
+    # ------------------------------------------------------ serialization
+    def to_json(self) -> dict:
+        return {
+            "schema": SCHEMA_VERSION,
+            "key": self.key,
+            "fingerprint": self.fingerprint.to_dict(),
+            "prepare_fingerprint": self.prepare_fingerprint.to_dict(),
+            "entries": self.entries,
+            "policy_kind": self.policy_kind,
+            "policy_meta": self.policy_meta,
+            "candidates": self.candidates,
+            "n_ops": self.n_ops,
+            "knob": self.knob,
+            "measured_t": self.measured_t,
+            "budget": self.budget,
+            "bw_constant_gbps": self.bw_constant_gbps,
+            "bw_curve": [[s, t] for s, t in self.bw_curve],
+            "created": self.created,
+            "uses": self.uses,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PolicyRecord":
+        if d.get("schema") != SCHEMA_VERSION:
+            raise ValueError(f"schema {d.get('schema')!r} != {SCHEMA_VERSION}")
+        return cls(key=d["key"],
+                   fingerprint=Fingerprint.from_dict(d["fingerprint"]),
+                   prepare_fingerprint=Fingerprint.from_dict(
+                       d["prepare_fingerprint"]),
+                   entries=list(d.get("entries", [])),
+                   policy_kind=str(d.get("policy_kind", "swap")),
+                   policy_meta=dict(d.get("policy_meta", {})),
+                   candidates=list(d.get("candidates", [])),
+                   n_ops=int(d.get("n_ops", 0)),
+                   knob=float(d.get("knob", 1.0)),
+                   measured_t=float(d.get("measured_t", 0.0)),
+                   budget=int(d.get("budget", 0)),
+                   bw_constant_gbps=float(d.get("bw_constant_gbps", 0.0)),
+                   bw_curve=[(int(s), float(t))
+                             for s, t in d.get("bw_curve", [])],
+                   created=float(d.get("created", 0.0)),
+                   uses=int(d.get("uses", 0)))
+
+
+class PolicyStore:
+    """In-memory LRU over :class:`PolicyRecord`, optionally mirrored to a
+    directory of JSON files (one per record, named by key)."""
+
+    def __init__(self, cfg, readonly: bool = False):
+        self.cfg = cfg
+        self.dir: Optional[str] = cfg.dir or None
+        # read-only attach (e.g. a serving process inspecting a trainer's
+        # store): never writes, never deletes — in particular a shared dir
+        # holding more than max_records must not lose records to this
+        # reader's load-time eviction
+        self.readonly = readonly
+        self.max_records = max(int(cfg.max_records), 1)
+        self._records: "collections.OrderedDict[str, PolicyRecord]" = \
+            collections.OrderedDict()
+        self.n_lookups = self.n_exact_hits = self.n_sim_hits = 0
+        self.n_misses = self.n_evictions = 0
+        self.n_loaded = self.n_corrupt = 0
+        if self.dir:
+            self._load_dir()
+
+    # ----------------------------------------------------------- loading
+    def _load_dir(self) -> None:
+        try:
+            os.makedirs(self.dir, exist_ok=True)
+            names = [n for n in os.listdir(self.dir) if n.endswith(".json")]
+        except OSError:
+            self.n_corrupt += 1
+            return
+        paths = [os.path.join(self.dir, n) for n in names]
+        # oldest-modified first, so insertion order doubles as LRU order
+        paths.sort(key=lambda p: (os.path.getmtime(p)
+                                  if os.path.exists(p) else 0.0))
+        for path in paths:
+            try:
+                with open(path) as f:
+                    rec = PolicyRecord.from_json(json.load(f))
+            except (OSError, ValueError, KeyError, TypeError,
+                    json.JSONDecodeError):
+                self.n_corrupt += 1
+                continue
+            self._records[rec.key] = rec
+            self.n_loaded += 1
+        self._evict_over_capacity()
+
+    # ------------------------------------------------------------ writes
+    def _path(self, key: str) -> str:
+        return os.path.join(self.dir, f"{key}.json")
+
+    def _persist(self, rec: PolicyRecord) -> None:
+        if not self.dir or self.readonly:
+            return
+        os.makedirs(self.dir, exist_ok=True)
+        tmp = self._path(rec.key) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec.to_json(), f)
+        os.replace(tmp, self._path(rec.key))
+
+    def _evict_over_capacity(self) -> None:
+        while len(self._records) > self.max_records:
+            key, _ = self._records.popitem(last=False)
+            self.n_evictions += 1
+            if self.dir and not self.readonly:
+                try:
+                    os.remove(self._path(key))
+                except OSError:
+                    pass
+
+    def put(self, rec: PolicyRecord) -> None:
+        self._records[rec.key] = rec
+        self._records.move_to_end(rec.key)
+        self._evict_over_capacity()
+        self._persist(rec)
+
+    def touch(self, rec: PolicyRecord) -> None:
+        """Record a use: bumps LRU recency and the use counter.  The disk
+        side only needs its mtime refreshed (restart LRU order follows
+        mtime) — rewriting the whole record per hit would serialize every
+        candidate on every reuse; the ``uses`` counter is informational
+        and flushed whenever the record is next ``put``."""
+        rec.uses += 1
+        if rec.key in self._records:
+            self._records.move_to_end(rec.key)
+        if self.dir and not self.readonly:
+            try:
+                os.utime(self._path(rec.key), None)
+            except OSError:
+                self._persist(rec)          # file vanished: restore it
+
+    # ------------------------------------------------------------ lookup
+    def get_exact(self, key: str) -> Optional[PolicyRecord]:
+        return self._records.get(key)
+
+    def nearest(self, fp: Fingerprint) -> Tuple[Optional[PolicyRecord], float]:
+        """Best-matching record and its calibrated similarity: each record
+        is reachable through either of its two fingerprints (max taken).
+        A best match below the warm-start floor is counted as a miss —
+        it cannot influence adaptation, so reporting it as a hit would
+        make a never-matching cache look warm."""
+        self.n_lookups += 1
+        hit = self._records.get(fp.exact)   # O(1) fast path (keys are
+        if hit is not None:                 # prepare-fingerprint hashes)
+            self.n_exact_hits += 1
+            return hit, 1.0
+        best: Optional[PolicyRecord] = None
+        best_sim = 0.0
+        for rec in self._records.values():
+            sim = max(similarity(fp, rec.prepare_fingerprint),
+                      similarity(fp, rec.fingerprint))
+            if sim > best_sim or best is None:
+                best, best_sim = rec, sim
+        floor = getattr(self.cfg, "warm_threshold", 0.0)
+        if best is None or best_sim < floor:
+            self.n_misses += 1
+        elif best_sim >= 1.0:
+            self.n_exact_hits += 1
+        else:
+            self.n_sim_hits += 1
+        return best, best_sim
+
+    # ------------------------------------------------------------- misc
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def records(self) -> List[PolicyRecord]:
+        return list(self._records.values())
+
+    def stats(self) -> dict:
+        return {
+            "records": len(self._records),
+            "dir": self.dir or "",
+            "lookups": self.n_lookups,
+            "exact_hits": self.n_exact_hits,
+            "sim_hits": self.n_sim_hits,
+            "misses": self.n_misses,
+            "evictions": self.n_evictions,
+            "loaded": self.n_loaded,
+            "corrupt_skipped": self.n_corrupt,
+        }

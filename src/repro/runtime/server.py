@@ -37,13 +37,17 @@ class Request:
     done: bool = False
     resident_since: int = 0        # tick at which it last entered a slot
     n_spills: int = 0
+    # tick-level latency bookkeeping (benchmarks/serving_bench.py)
+    submit_tick: int = 0           # tick at which the request was submitted
+    first_token_tick: int = -1     # tick at which prefill produced token 0
+    done_tick: int = -1            # tick at which the request completed
 
 
 class Server:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 512, memory=None,
                  max_active: Optional[int] = None, hostmem=None,
-                 rotate_every: int = 1):
+                 rotate_every: int = 1, policystore=None):
         assert cfg.family in ("dense", "moe", "ssm"), \
             "server prefill path covers dense/moe/ssm; others serve via decode-only"
         self.cfg, self.params = cfg, params
@@ -75,13 +79,22 @@ class Server:
         # strictest fairness; larger k trades waiter latency for k-fold
         # fewer spill round trips per generated token.
         self.rotate_every = max(rotate_every, 1)
+        # shared adaptation cache (repro.policystore): the serving process
+        # reports cache warmth alongside its own stats
+        self.policystore = policystore
+        # tick-level batching log: (resident slots at decode, wall seconds,
+        # tokens emitted) per tick — the serving bench derives throughput,
+        # latency percentiles, and slot occupancy from this.  Bounded: a
+        # long-running server keeps a sliding window, not full history
+        self.tick_log: collections.deque = collections.deque(maxlen=4096)
 
     # ----------------------------------------------------------- admission
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> int:
         self._rid += 1
         self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens, eos_id))
+                                  max_new_tokens, eos_id,
+                                  submit_tick=self.ticks))
         self._admit()
         return self._rid
 
@@ -115,6 +128,8 @@ class Server:
                                       len(req.prompt))
         first = int(jnp.argmax(logits[0, -1]))
         req.generated.append(first)
+        if req.first_token_tick < 0:
+            req.first_token_tick = self.ticks
         self.active[req.rid] = req
 
     def _write_slot(self, state, pstate, slot: int, plen: int):
@@ -176,9 +191,12 @@ class Server:
     # ---------------------------------------------------------------- tick
     def tick(self) -> Dict[int, int]:
         """Advance all resident slots one token; returns {rid: token}."""
+        import time
+        t0 = time.perf_counter()
         self._admit()
         if not self.active:
             return {}
+        n_resident = len(self.active)
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for req in self.active.values():
             tokens[req.slot, 0] = req.generated[-1]
@@ -197,11 +215,13 @@ class Server:
                 finished.append(req.rid)
         for rid in finished:
             req = self.active.pop(rid)
+            req.done_tick = self.ticks
             self.completed[rid] = req
             self.free_slots.append(req.slot)
         self.ticks += 1
         self._admit()
         self._rotate()
+        self.tick_log.append((n_resident, time.perf_counter() - t0, len(out)))
         return out
 
     def run_until_done(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
@@ -212,6 +232,46 @@ class Server:
         return {rid: req.generated for rid, req in self.completed.items()}
 
     # --------------------------------------------------------------- stats
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        if not xs:
+            return 0.0
+        xs = sorted(xs)
+        return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+    def latency_stats(self) -> dict:
+        """Tick-level batching stats: per-tick wall time, slot occupancy,
+        and per-request queue-wait / completion-span percentiles (in
+        ticks) — the numbers ``benchmarks/serving_bench.py`` compares
+        between queueing and over-subscription admission.  Tick-derived
+        numbers cover the ``tick_log`` window (last 4096 ticks)."""
+        done = list(self.completed.values())
+        waits = [float(r.first_token_tick - r.submit_tick)
+                 for r in done if r.first_token_tick >= 0]
+        spans = [float(r.done_tick - r.submit_tick)
+                 for r in done if r.done_tick >= 0]
+        tick_s = [dt for _, dt, _ in self.tick_log]
+        occ = [n / self.max_batch for n, _, _ in self.tick_log]
+        toks = sum(k for _, _, k in self.tick_log)
+        total_s = sum(tick_s)
+        return {
+            "n_completed": len(done),
+            "ticks": len(self.tick_log),
+            "tokens": toks,
+            "tokens_per_s": toks / total_s if total_s > 0 else 0.0,
+            "tokens_per_tick": toks / max(len(self.tick_log), 1),
+            "slot_occupancy": float(np.mean(occ)) if occ else 0.0,
+            "tick_ms": {"p50": self._pct(tick_s, 0.5) * 1e3,
+                        "p95": self._pct(tick_s, 0.95) * 1e3,
+                        "max": (max(tick_s) if tick_s else 0.0) * 1e3},
+            "queue_wait_ticks": {"p50": self._pct(waits, 0.5),
+                                 "p95": self._pct(waits, 0.95),
+                                 "max": max(waits) if waits else 0.0},
+            "completion_ticks": {"p50": self._pct(spans, 0.5),
+                                 "p95": self._pct(spans, 0.95),
+                                 "max": max(spans) if spans else 0.0},
+        }
+
     def stats(self) -> dict:
         hm = self.hostmem.stats() if self.hostmem else None
         # surface the serving-relevant traffic class directly: spill time
@@ -227,4 +287,7 @@ class Server:
             "preemptions": self.n_preemptions,
             "kv_spill_class": kv_cls,
             "hostmem": hm,
+            "latency": self.latency_stats(),
+            "policystore": (self.policystore.stats()
+                            if self.policystore is not None else None),
         }

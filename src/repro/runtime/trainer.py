@@ -42,6 +42,13 @@ class TrainReport:
     stages: List[str] = field(default_factory=list)
     checkpoints: List[str] = field(default_factory=list)
     failures: List[str] = field(default_factory=list)
+    # repro.policystore: per-tier hit counters + adaptation latencies
+    # (None when the runtime has no store attached)
+    policystore: Optional[dict] = None
+
+    @property
+    def genpolicy_steps(self) -> int:
+        return sum(1 for s in self.stages if s == "GenPolicy")
 
 
 class Trainer:
@@ -140,6 +147,7 @@ class Trainer:
                 self._checkpoint(block=True)   # emergency checkpoint
                 raise
         self.ckpt.wait()
+        self.report.policystore = self.rt.policystore_stats()
         return self.report
 
     def _one_step(self, batch, fault_hook=None):

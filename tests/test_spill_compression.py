@@ -1,0 +1,111 @@
+"""int8 KV-spill compression (HostMemConfig.spill_compression): staged
+bytes shrink 2-4x, the round trip stays within quantization tolerance,
+and lifetime rules (consume-on-restore, idempotent discard) carry over
+from the raw path."""
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.common.config import HostMemConfig
+from repro.hostmem import HostMemTier
+from repro.hostmem.kvspill import KVSpillManager
+from repro.models.registry import get_api
+from repro.runtime.server import Server
+
+
+@pytest.fixture(scope="module")
+def llama_serve():
+    cfg = C.get_reduced("llama2_paper")
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _int8_tier():
+    return HostMemTier(HostMemConfig(spill_compression="int8",
+                                     spill_compress_min_bytes=1))
+
+
+def test_unknown_compression_rejected():
+    tier = HostMemTier()
+    with pytest.raises(ValueError, match="spill compression"):
+        KVSpillManager(tier.pool, tier.engine, compression="zstd")
+
+
+def test_int8_roundtrip_within_tolerance(llama_serve):
+    cfg, params = llama_serve
+    srv = Server(cfg, params, max_batch=2, max_len=32)
+    tier = _int8_tier()
+    srv.submit(np.arange(5, dtype=np.int32), max_new_tokens=30)
+    srv.submit(np.arange(7, dtype=np.int32), max_new_tokens=30)
+    srv.tick()
+    before_k = np.asarray(srv.state.attn_k[:, 0], np.float32).copy()
+    before_pos = int(srv.state.pos[0])
+
+    sp = tier.kvspill.spill(srv.state, 0, tag="req-a")
+    ks = tier.kvspill.stats()
+    assert ks["compression"] == "int8"
+    assert ks["bytes_spilled"] < ks["bytes_raw"]   # payload really shrank
+    assert ks["compression_ratio"] > 1.5
+    assert any(fs.kind == "int8" for fs in sp.layout)
+
+    srv.state = srv.state._replace(
+        attn_k=srv.state.attn_k.at[:, 0].set(0),
+        pos=srv.state.pos.at[0].set(0))
+    srv.state = tier.kvspill.restore(srv.state, sp, 0)
+    after_k = np.asarray(srv.state.attn_k[:, 0], np.float32)
+    # row-wise symmetric int8: error bounded by scale/2 = absmax/254 per row
+    tol = np.abs(before_k).max() / 100.0 + 1e-6
+    np.testing.assert_allclose(after_k, before_k, atol=tol)
+    assert int(srv.state.pos[0]) == before_pos     # pos is metadata: exact
+    assert tier.pool.bytes_in_use == 0
+
+
+def test_int8_discard_is_idempotent(llama_serve):
+    cfg, params = llama_serve
+    srv = Server(cfg, params, max_batch=1, max_len=32)
+    tier = _int8_tier()
+    srv.submit(np.arange(6, dtype=np.int32), max_new_tokens=10)
+    srv.tick()
+    sp = tier.kvspill.spill(srv.state, 0, tag="cancelled")
+    tier.kvspill.discard(sp)
+    tier.kvspill.discard(sp)                       # no double free
+    assert tier.kvspill.n_discards == 1
+    assert tier.pool.bytes_in_use == 0
+
+
+def test_small_fields_stay_raw(llama_serve):
+    """Rows under the compression floor ship raw (quantizing tiny rows
+    costs more than it saves)."""
+    cfg, params = llama_serve
+    srv = Server(cfg, params, max_batch=1, max_len=32)
+    tier = HostMemTier(HostMemConfig(spill_compression="int8",
+                                     spill_compress_min_bytes=1 << 30))
+    srv.submit(np.arange(6, dtype=np.int32), max_new_tokens=10)
+    srv.tick()
+    before_k = np.asarray(srv.state.attn_k[:, 0]).copy()
+    sp = tier.kvspill.spill(srv.state, 0, tag="raw")
+    assert all(fs.kind == "raw" for fs in sp.layout)
+    srv.state = tier.kvspill.restore(srv.state, sp, 0)
+    np.testing.assert_array_equal(np.asarray(srv.state.attn_k[:, 0]),
+                                  before_k)        # raw path stays bit-exact
+
+
+def test_oversubscribed_int8_server_completes(llama_serve):
+    """Over-subscription with compressed spill still completes every
+    request (decode is lossy-tolerant; outputs may legally differ from the
+    resident baseline)."""
+    cfg, params = llama_serve
+    tier = _int8_tier()
+    srv = Server(cfg, params, max_batch=2, max_len=48, max_active=4,
+                 hostmem=tier)
+    rng = np.random.RandomState(0)
+    rids = [srv.submit(rng.randint(0, cfg.vocab_size, size=6),
+                       max_new_tokens=5) for _ in range(4)]
+    out = srv.run_until_done(max_ticks=400)
+    assert sorted(out) == sorted(rids)
+    assert all(len(v) == 5 for v in out.values())
+    assert srv.n_preemptions > 0
+    assert tier.kvspill.stats()["compression_ratio"] > 1.5
+    assert tier.pool.bytes_in_use == 0
