@@ -1,0 +1,133 @@
+"""Monitoring hot-path micro-benchmarks (ISSUE 5).
+
+Old-vs-new timings for the four always-on/adaptation primitives this PR
+vectorized, each printed with its speedup:
+
+  * ``signature`` — per-iteration op-stream signature + Algo-1 similarity:
+    full re-concatenate + re-bincount (old) vs the incremental
+    ``SignatureAccumulator`` + content-key short-circuit (new);
+  * ``match`` — §6.1 fuzzy matching: per-instance Python loop with
+    O(old x bucket) ``pack_features`` calls (reference) vs the
+    array-native bucketed assignment;
+  * ``fingerprint`` — policystore sketching of a recurring stream: full
+    shingle/MinHash/unique pass vs the exact-hash memo hit;
+  * ``nearest@1k`` — policy lookup across 1000 records: exhaustive
+    Python similarity scan vs the LSH band-bucket probe.
+
+All inputs are synthetic and CPU-only; no jax dispatch is involved, so
+the numbers isolate the monitoring bookkeeping itself.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.common.config import ChameleonConfig, PolicyStoreConfig
+from repro.core import tokenizer
+from repro.core.matching import match_instances, match_instances_reference
+from repro.core.profiler import ProfileData, TensorInstance
+from repro.core.stages import StageMachine
+from repro.policystore import (PolicyRecord, PolicyStore, fingerprint_tokens)
+
+from benchmarks.common import time_call
+
+
+# --------------------------------------------------------------- fixtures
+def _synth_profile(n_sites=8, n_layers=64, jitter=0, seed=0) -> ProfileData:
+    r = np.random.RandomState(seed)
+    tensors = []
+    uid = 0
+    per = 12
+    n_ops = n_sites * n_layers * per
+    for s in range(n_sites):
+        for l in range(n_layers):
+            birth = (s * n_layers + l) * per + \
+                (int(r.randint(0, jitter + 1)) if jitter else 0)
+            tensors.append(TensorInstance(
+                uid, 1 << 20, birth, n_ops - birth, site=f"site{s}",
+                layer=l, dtype_code=1 + (s % 3), shape=(64, 64 + s)))
+            uid += 1
+    return ProfileData(np.zeros(n_ops, np.int32), tensors, 1.0, 0)
+
+
+def _record(fp) -> PolicyRecord:
+    return PolicyRecord.from_policy(
+        fingerprint=fp, prepare_fingerprint=fp, swap=None, candidates=[],
+        n_ops=max(fp.length, 1), knob=1.0, measured_t=0.1, budget=1 << 30,
+        policy_kind="conservative")
+
+
+def run(iters: int = 5):
+    rows: list = []
+    rng = np.random.RandomState(0)
+
+    def add(name, t_old, t_new, extra=""):
+        sp = t_old / t_new if t_new > 0 else float("inf")
+        sep = " " if extra else ""
+        rows.append((f"monitor.{name}.old", t_old, f"speedup=1.0x{sep}{extra}"))
+        rows.append((f"monitor.{name}.new", t_new,
+                     f"speedup={sp:.1f}x{sep}{extra}"))
+
+    # ---- signature: 4 dispatches x 50k virtual ops, unchanged iteration
+    streams = [tokenizer.TokenStream(
+        rng.randint(1, 120, size=50_000).astype(np.int32))
+        for _ in range(4)]
+    arrs = [s.tokens for s in streams]
+    sm_old = StageMachine(ChameleonConfig())
+    sm_new = StageMachine(ChameleonConfig())
+    acc = tokenizer.SignatureAccumulator()
+    sm_new.observe(acc.update(streams))
+
+    def sig_old():
+        sig = tokenizer.sequence_signature(arrs)
+        sm_old.observe(sig)
+
+    def sig_new():
+        sm_new.observe(acc.update(streams))
+
+    add("signature", time_call(sig_old, iters=iters),
+        time_call(sig_new, iters=iters),
+        f"n_ops={sum(s.virtual_len for s in streams)}")
+
+    # ---- match_instances: 512 candidates, 64-deep buckets
+    old_p = _synth_profile(seed=1)
+    new_p = _synth_profile(jitter=6, seed=2)
+    ref = match_instances_reference(old_p, new_p)
+    vec = match_instances(old_p, new_p)
+    assert ref.mapping == vec.mapping and ref.unmatched == vec.unmatched
+    add("match_instances",
+        time_call(match_instances_reference, old_p, new_p, iters=iters),
+        time_call(match_instances, old_p, new_p, iters=iters),
+        f"candidates={len(old_p.candidates)} matched={len(vec.mapping)}")
+
+    # ---- fingerprint: recurring 200k-token stream (memo hit vs full pass)
+    toks = np.tile(rng.randint(1, 80, size=2_000).astype(np.int32), 100)
+    fingerprint_tokens(toks)                      # warm the memo
+    add("fingerprint",
+        time_call(lambda: fingerprint_tokens(toks, cache=False),
+                  iters=iters),
+        time_call(lambda: fingerprint_tokens(toks), iters=iters),
+        f"tokens={toks.size}")
+
+    # ---- nearest @ 1k records: LSH probe vs exhaustive similarity scan
+    store = PolicyStore(PolicyStoreConfig(max_records=1024))
+    base = None
+    for i in range(1000):
+        t = rng.randint(1, 40, size=400).astype(np.int32)
+        if i == 500:
+            base = t
+        store.put(_record(fingerprint_tokens(t, cache=False)))
+    query = fingerprint_tokens(np.concatenate([base, base[:5]]), cache=False)
+    r_new, s_new = store.nearest(query)
+    r_old, s_old = store.nearest_exhaustive(query)
+    assert s_new >= min(s_old, store.cfg.reuse_threshold)
+    evals0 = store.n_sim_evals
+
+    def probe():
+        store.nearest(query)
+
+    t_new = time_call(probe, iters=iters)
+    t_old = time_call(store.nearest_exhaustive, query, iters=iters)
+    per_probe = (store.n_sim_evals - evals0) // max(iters + 2, 1)
+    add("nearest@1k", t_old, t_new,
+        f"records=1000 sim_evals/probe<={max(per_probe, 1)}")
+    return rows

@@ -10,6 +10,7 @@ from benchmarks.common import emit
 
 MODULES = [
     "table1_profiling",
+    "monitor_bench",
     "fig4_grouping",
     "table2_perf_benefit",
     "table4_max_size",

@@ -38,18 +38,36 @@ def run(iters: int = 5):
 
     base = time_call(step, *args, iters=iters)
 
-    # (a) Lightweight: cached token stream + similarity + stage machine
+    # (a) Lightweight: cached token stream + incremental signature + stage
+    # machine — the runtime's actual steady-state path (record_dispatch
+    # serves the cached TokenStream, the accumulator sees an unchanged
+    # content hash and the stage machine short-circuits to (0, 1))
     traced = step.trace(*args)
-    toks = tokenizer.tokenize_jaxpr(traced.jaxpr)
+    stream = tokenizer.tokenize_jaxpr_stream(traced.jaxpr)
     sm = StageMachine(ChameleonConfig())
+    acc = tokenizer.SignatureAccumulator()
 
     def light():
         out = step(*args)
-        sig = tokenizer.sequence_signature([toks])
-        sm.observe(sig)
+        sm.observe(acc.update([stream]))
         return out
 
     t_light = time_call(light, iters=iters)
+
+    # bookkeeping-only old-vs-new (the full-step percentage above is
+    # noise-dominated on CPU; this isolates the monitoring cost the
+    # incremental signature removed — re-concat + re-bincount per iter)
+    sm_old = StageMachine(ChameleonConfig())
+    toks = stream.tokens
+
+    def book_old():
+        sm_old.observe(tokenizer.sequence_signature([toks]))
+
+    def book_new():
+        sm.observe(acc.update([stream]))
+
+    t_book_old = time_call(book_old, iters=max(50, iters * 10))
+    t_book_new = time_call(book_new, iters=max(50, iters * 10))
 
     # (b) Detailed: full jaxpr walk + memory timeline every iteration
     cj = jax.make_jaxpr(make_grad_step(cfg, TrainConfig()))(*args)
@@ -83,6 +101,9 @@ def run(iters: int = 5):
         ("table1.baseline", base, "overhead=0%"),
         ("table1.lightweight", t_light,
          f"overhead={pct(t_light):.1f}% (paper:0.9%)"),
+        ("table1.lightweight_bookkeeping", t_book_new,
+         f"old={t_book_old * 1e6:.1f}us "
+         f"speedup={t_book_old / max(t_book_new, 1e-12):.1f}x"),
         ("table1.detailed", t_detail,
          f"overhead={pct(t_detail):.1f}% (paper:34.6%)"),
         ("table1.builtin_profiler", t_builtin,

@@ -270,6 +270,11 @@ class PolicyStoreConfig:
     # fingerprint sketch parameters
     minhash_perms: int = 64
     shingle: int = 4
+    # LSH band-bucket index over MinHash signatures: ``nearest`` probes
+    # bucket collisions first (sublinear past ~1k records) and falls back
+    # to a vectorized upper-bound-pruned scan only when the probe finds no
+    # reuse-grade match.  rows per band = minhash_perms // lsh_bands.
+    lsh_bands: int = 16
 
 
 @dataclass(frozen=True)

@@ -16,11 +16,19 @@ Exact match requires identical site bit + dtype + shape hash; position may
 drift by up to ``pos_tolerance`` buckets (minor sequence changes shift op
 indices slightly — the tolerance is what lets Chameleon ride out small
 changes without regenerating the policy).
+
+Hot path: :func:`match_instances` is array-native.  All candidate features
+are packed into int64 numpy arrays **once per profile** (lazily, cached on
+the profile object), new candidates are sorted/grouped by their exact-mask
+key, and the position-tolerance assignment resolves per bucket with array
+ops — no per-pair ``pack_features`` calls.  The original per-instance
+Python loop survives as :func:`match_instances_reference`; property tests
+(tests/test_monitor_hotpath.py) prove the two produce identical results.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -51,6 +59,58 @@ def pack_features(t: TensorInstance, n_ops: int) -> int:
 
 _EXACT_MASK = (1 << 56) - 1          # site | dtype | shape
 _POS_SHIFT = 56
+_NO_MATCH = np.int64(1) << 40       # larger than any reachable distance
+
+
+@dataclass
+class CandidateFeatures:
+    """Candidate features of one profile as flat int64 arrays (one row per
+    candidate, in ``prof.candidates`` order)."""
+    uids: np.ndarray                 # int64
+    key: np.ndarray                  # int64, exact-mask features (bits 0..55)
+    pos: np.ndarray                  # int64, position bucket 0..255
+    layer: np.ndarray                # int64
+    birth: np.ndarray                # int64
+
+    @property
+    def n(self) -> int:
+        return int(self.uids.size)
+
+
+def candidate_feature_arrays(prof) -> CandidateFeatures:
+    """Feature arrays for ``prof.candidates``, computed once and cached on
+    the profile object (works for :class:`ProfileData` and the store's
+    profile stubs alike).  The base key per unique (site, dtype, shape) is
+    memoized, so repeated shapes across layers — the common case — cost one
+    dict hit each; position buckets come from one vectorized expression.
+    The cache assumes candidates are not mutated afterwards."""
+    cached = getattr(prof, "_cand_feat_cache", None)
+    if cached is not None:
+        return cached
+    cands = prof.candidates
+    n = len(cands)
+    n_ops = max(int(prof.n_ops), 1)
+    uids = np.fromiter((t.uid for t in cands), np.int64, n)
+    births = np.fromiter((t.birth for t in cands), np.int64, n)
+    layers = np.fromiter((t.layer for t in cands), np.int64, n)
+    base = np.empty(n, np.int64)
+    memo: Dict[Tuple, int] = {}
+    for i, t in enumerate(cands):
+        mk = (t.site, t.dtype_code, t.shape)
+        b = memo.get(mk)
+        if b is None:
+            b = (_site_bit(t.site)
+                 | (t.dtype_code & 0xFF) << 32
+                 | _shape_hash(t.shape) << 40)
+            memo[mk] = b
+        base[i] = b
+    pos = np.minimum(births * 256 // n_ops, 255)
+    feats = CandidateFeatures(uids, base, pos, layers, births)
+    try:
+        prof._cand_feat_cache = feats
+    except AttributeError:
+        pass                          # slotted stub: just skip caching
+    return feats
 
 
 @dataclass
@@ -63,7 +123,66 @@ class MatchResult:
 def match_instances(old: ProfileData, new: ProfileData,
                     pos_tolerance: int = 16) -> MatchResult:
     """Associate old candidate instances with new ones (integer compares
-    only; layer index breaks ties among identical features)."""
+    only; layer index breaks ties among identical features).
+
+    Array-native: new candidates are lex-sorted by (key, layer, birth) so
+    each old candidate resolves against one contiguous bucket with a single
+    vectorized distance/argmin, exactly reproducing the reference greedy
+    assignment (first minimum in (layer, birth) order wins)."""
+    of = candidate_feature_arrays(old)
+    nf = candidate_feature_arrays(new)
+    if of.n == 0:
+        return MatchResult({}, [], 0)
+    if nf.n == 0:
+        return MatchResult({}, [int(u) for u in of.uids], 0)
+
+    order = np.lexsort((nf.birth, nf.layer, nf.key))
+    skey = nf.key[order]
+    spos = nf.pos[order]
+    slayer = nf.layer[order]
+    suid = nf.uids[order]
+
+    # group old candidates by key too (stable: preserves candidate order
+    # within a bucket, which is what the greedy tie-break depends on; the
+    # buckets themselves are independent, so bucket order is free)
+    oorder = np.argsort(of.key, kind="stable")
+    okey = of.key[oorder]
+    runs = np.flatnonzero(np.diff(okey)) + 1
+    ostarts = np.concatenate([[0], runs, [of.n]])
+
+    lo = np.searchsorted(skey, okey[ostarts[:-1]], side="left")
+    hi = np.searchsorted(skey, okey[ostarts[:-1]], side="right")
+
+    mapping: Dict[int, int] = {}
+    unmatched: List[Tuple[int, int]] = []       # (orig old index, uid)
+    moved = 0
+    for bi in range(ostarts.size - 1):
+        o_idx = oorder[ostarts[bi]:ostarts[bi + 1]]
+        l, h = int(lo[bi]), int(hi[bi])
+        if l == h:
+            unmatched.extend((int(i), int(of.uids[i])) for i in o_idx)
+            continue
+        # (o, b) distance matrix for the whole bucket, one vectorized op
+        d = (np.abs(spos[l:h][None, :] - of.pos[o_idx][:, None])
+             + (slayer[l:h][None, :] != of.layer[o_idx][:, None]))
+        for r, i in enumerate(o_idx):
+            j = int(np.argmin(d[r]))
+            dj = int(d[r, j])
+            if dj > pos_tolerance:
+                unmatched.append((int(i), int(of.uids[i])))
+                continue
+            d[:, j] = _NO_MATCH                 # column consumed
+            mapping[int(of.uids[i])] = int(suid[l + j])
+            if dj:
+                moved += 1
+    unmatched.sort()                            # reference order: old order
+    return MatchResult(mapping, [u for _, u in unmatched], moved)
+
+
+def match_instances_reference(old: ProfileData, new: ProfileData,
+                              pos_tolerance: int = 16) -> MatchResult:
+    """Original per-instance Python implementation, kept as the parity
+    oracle for the vectorized :func:`match_instances`."""
     new_feats: Dict[int, List[TensorInstance]] = {}
     for t in new.candidates:
         key = pack_features(t, new.n_ops) & _EXACT_MASK

@@ -74,9 +74,28 @@ class ProfileData:
     def __post_init__(self):
         self.n_ops = int(len(self.op_tokens))
 
+    def __setattr__(self, name, value):
+        # replacing the tensor list (e.g. dryrun's shallow-copied per-chip
+        # rescale) must drop the derived candidate/feature caches
+        if name == "tensors":
+            self.__dict__.pop("_candidates", None)
+            self.__dict__.pop("_cand_feat_cache", None)
+        object.__setattr__(self, name, value)
+
     @property
     def candidates(self) -> List[TensorInstance]:
-        return [t for t in self.tensors if t.is_candidate]
+        cached = self.__dict__.get("_candidates")
+        if cached is None:
+            cached = [t for t in self.tensors if t.is_candidate]
+            self.__dict__["_candidates"] = cached
+        return cached
+
+    def feature_arrays(self):
+        """Packed int64 candidate-feature arrays (see ``core.matching``),
+        computed lazily and cached — the §6.1 matching hot path reads these
+        instead of re-packing features per comparison."""
+        from repro.core.matching import candidate_feature_arrays
+        return candidate_feature_arrays(self)
 
 
 # --------------------------------------------------------------------------

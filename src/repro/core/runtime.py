@@ -37,7 +37,8 @@ from repro.core.policy import (ChameleonOOMError, SwapPolicy,
 from repro.core.profiler import ProfileData, profile_jaxpr
 from repro.core.stages import Stage, StageMachine
 from repro.policystore import (DriftClassifier, PolicyRecord, PolicyStore,
-                               Tier, fingerprint_profile, fingerprint_tokens)
+                               Tier, fingerprint_profile,
+                               fingerprint_signature)
 
 # grouping knobs tried across the n GenPolicy steps (variant selection)
 VARIANT_KNOBS = (1.0, 2.0, 0.5, 4.0, 0.25)
@@ -65,12 +66,15 @@ class ChameleonRuntime:
             hostmem = HostMemTier.from_chameleon(cfg)
         self.hostmem = hostmem
         self._step_cache: Dict[str, Callable] = {}
-        self._trace_cache: Dict[Tuple, np.ndarray] = {}
+        self._trace_cache: Dict[Tuple, tokenizer.TokenStream] = {}
         self._jaxpr_cache: Dict[Tuple, Any] = {}
         self.applied: AppliedPolicy = self.executor.baseline()
         self.profile: Optional[ProfileData] = None
         self.baseline_profile: Optional[ProfileData] = None
-        self._iter_streams: List[np.ndarray] = []
+        self._iter_streams: List[tokenizer.TokenStream] = []
+        # incremental iteration signature: histogram/length deltas are
+        # applied only for dispatch slots whose content hash changed
+        self._sig_acc = tokenizer.SignatureAccumulator()
         self._example_args: Optional[tuple] = None
         self.variants: List[PolicyVariant] = []
         self._pending_variant: Optional[PolicyVariant] = None
@@ -87,7 +91,7 @@ class ChameleonRuntime:
             self.store = PolicyStore(cfg.policystore)
             self.drift = DriftClassifier(cfg.policystore)
         self._gen_knobs: Tuple[float, ...] = VARIANT_KNOBS
-        self._last_sig: Optional[np.ndarray] = None
+        self._last_sig: Optional[tokenizer.Signature] = None
         # dispatch-shape drift: same primitives, different memory profile
         # (seq-len bucket cycling) — invisible to the token stream, so the
         # runtime tracks the train dispatch's arg shapes itself
@@ -251,9 +255,11 @@ class ChameleonRuntime:
         ps = self.cfg.policystore
         prep_fp = self._fingerprint(prof)
         if self._last_sig is not None and len(self._last_sig):
-            iter_fp = fingerprint_tokens(self._last_sig,
-                                         n_perms=ps.minhash_perms,
-                                         shingle=ps.shingle)
+            # virtual-length-aware: capped scan materializations must not
+            # collapse different layer counts into one iteration key
+            iter_fp = fingerprint_signature(self._last_sig,
+                                            n_perms=ps.minhash_perms,
+                                            shingle=ps.shingle)
         else:
             iter_fp = prep_fp
         kind = ("swap" if self.best.swap is not None
@@ -299,7 +305,7 @@ class ChameleonRuntime:
                 cj = traced.jaxpr
             except AttributeError:
                 cj = jax.make_jaxpr(fn)(*args)
-            toks = tokenizer.tokenize_jaxpr(cj)
+            toks = tokenizer.tokenize_jaxpr_stream(cj)
             self._trace_cache[key] = toks
         self._iter_streams.append(toks)
         if name == "train":
@@ -312,7 +318,7 @@ class ChameleonRuntime:
         # the policy that *this* iteration executed — _genpolicy_step /
         # _select_best may replace self.applied for the next one below
         ran = self.applied
-        sig = tokenizer.sequence_signature(self._iter_streams)
+        sig = self._sig_acc.update(self._iter_streams)
         self._iter_streams = []
         self._last_sig = sig
         prev_stage = self.machine.stage
@@ -491,6 +497,7 @@ class ChameleonRuntime:
                              if self.best and self.best.swap else 0.0),
             "profiling_overhead_s": self.profiling_overhead_s,
             "adaptation_overhead_s": self.adaptation_overhead_s,
+            "signature": self._sig_acc.stats(),
             "hostmem": self.hostmem.stats() if self.hostmem else None,
             "policystore": self.policystore_stats(),
         }

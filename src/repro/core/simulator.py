@@ -16,12 +16,18 @@ preferable to OOM.
 Swap-out (§5.4.2): triggered at last forward use; completion layer found
 searching **forward** for spare transfer budget; this release point feeds the
 custom-recordStream analogue (early reuse) and the Fig-8 metric.
+
+Hot-path layout: per-layer transfer budgets live in one float64 numpy
+array (``LogicalLayer.remaining_time`` is a view into it), layer starts in
+one int64 array, so the backward/forward budget searches are single
+``flatnonzero`` calls over slices instead of Python loops, and transfer
+times are memoized per tensor size.  GenPolicy runs the simulator once per
+variant (2–5 per adaptation), so this is what bounds per-variant cost.
 """
 from __future__ import annotations
 
-import bisect
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -31,14 +37,33 @@ from repro.core.mrl import MRL
 from repro.core.profiler import ProfileData
 
 
-@dataclass
 class LogicalLayer:
-    index: int
-    start_op: int
-    end_op: int
-    kind: str                     # FWD | BWD | OPT
-    remaining_time: float
-    candidates: List[int] = field(default_factory=list)   # tensor uids
+    """One logical layer; ``remaining_time`` reads/writes the simulator's
+    shared per-layer budget array, so vectorized searches and this object
+    view never disagree."""
+
+    __slots__ = ("index", "start_op", "end_op", "kind", "candidates", "_rem")
+
+    def __init__(self, index: int, start_op: int, end_op: int, kind: str,
+                 rem: np.ndarray):
+        self.index = index
+        self.start_op = start_op
+        self.end_op = end_op
+        self.kind = kind
+        self.candidates: List[int] = []   # tensor uids
+        self._rem = rem
+
+    @property
+    def remaining_time(self) -> float:
+        return float(self._rem[self.index])
+
+    @remaining_time.setter
+    def remaining_time(self, v: float) -> None:
+        self._rem[self.index] = v
+
+    def __repr__(self):
+        return (f"LogicalLayer({self.index}, [{self.start_op},{self.end_op})"
+                f", {self.kind}, rem={self.remaining_time:.3g})")
 
 
 @dataclass
@@ -59,6 +84,16 @@ class PolicyEntry:
         return getattr(self, "_t_swap", 0.0)
 
 
+def _phase_splits(lo: int, hi: int, g: int) -> np.ndarray:
+    """Boundaries of ``min(g, hi-lo)`` near-equal groups of [lo, hi)."""
+    total = hi - lo
+    g = min(g, total)
+    # first `total % g` groups get one extra op (same as serial divmod fill)
+    return lo + np.concatenate(
+        [[0], np.cumsum(np.full(g, total // g)
+                        + (np.arange(g) < total % g))])
+
+
 class Simulator:
     def __init__(self, prof: ProfileData, peak_op: int, cfg: ChameleonConfig,
                  bwmodel=None, engine=None):
@@ -69,6 +104,7 @@ class Simulator:
         # measured host-link curve (repro.hostmem.bwmodel) — when calibrated
         # it prices transfers size-dependently instead of with the constant
         self.bwmodel = bwmodel
+        self._tswap_cache: Dict[int, float] = {}
         # live transfer engine (repro.hostmem.engine): its per-class backlog
         # prices link *contention* — the paper's Eq. 3 assumes an idle link,
         # but a queued checkpoint/kv-spill drain eats into the transfer
@@ -76,7 +112,7 @@ class Simulator:
         self.contention_s = (engine.queued_delay() if engine is not None
                              else 0.0)
         self.layers = self._build_layers()
-        self._starts = [l.start_op for l in self.layers]
+        self._peak_layer = self.layer_of(self.peak_op)
         self._charge_contention()
         self.stall_time = 0.0
 
@@ -85,66 +121,79 @@ class Simulator:
         transfer budgets: the link is busy draining it when the iteration
         starts, so early overlap windows are not actually free."""
         left = self.contention_s
-        for lay in self.layers:
-            if left <= 0.0:
-                break
-            take = min(lay.remaining_time, left)
-            lay.remaining_time -= take
-            left -= take
+        if left <= 0.0 or not self.layers:
+            return
+        # prefix drain in one pass: layer i keeps the part of its budget
+        # that the backlog (spread over the cumulative prefix) leaves over
+        rem = self._remaining
+        cum = np.cumsum(rem)
+        np.subtract(np.clip(cum - left, 0.0, None),
+                    np.clip(cum - rem - left, 0.0, None), out=rem)
 
     # ------------------------------------------------------------- layers
     def _build_layers(self) -> List[LogicalLayer]:
         n = self.prof.n_ops
         t_op = self.prof.t_iter / max(n, 1)              # Eq. 1 per-op average
         G = self.cfg.groups_per_phase or self.prof.scan_layers or 32
-        layers: List[LogicalLayer] = []
-
-        def split(lo: int, hi: int, kind: str):
-            total = hi - lo
-            if total <= 0:
-                return
-            g = min(G, total)
-            base, rem = divmod(total, g)
-            cur = lo
-            for i in range(g):
-                size = base + (1 if i < rem else 0)
-                layers.append(LogicalLayer(
-                    len(layers), cur, cur + size, kind,
-                    remaining_time=size * t_op))
-                cur += size
-
-        split(0, self.peak_op, "FWD")
-        split(self.peak_op, n, "BWD")
-        if layers:
-            layers[-1].kind = "OPT"
-        return layers
+        bounds: List[np.ndarray] = []
+        kinds: List[str] = []
+        for lo, hi, kind in ((0, self.peak_op, "FWD"), (self.peak_op, n, "BWD")):
+            if hi - lo <= 0:
+                continue
+            b = _phase_splits(lo, hi, G)
+            bounds.append(b)
+            kinds.extend([kind] * (b.size - 1))
+        if not bounds:
+            self._remaining = np.zeros(0, np.float64)
+            self._starts_arr = np.zeros(0, np.int64)
+            return []
+        starts = np.concatenate([b[:-1] for b in bounds])
+        ends = np.concatenate([b[1:] for b in bounds])
+        kinds[-1] = "OPT"
+        self._remaining = (ends - starts).astype(np.float64) * t_op
+        self._starts_arr = starts.astype(np.int64)
+        return [LogicalLayer(i, int(s), int(e), k, self._remaining)
+                for i, (s, e, k) in enumerate(zip(starts, ends, kinds))]
 
     def layer_of(self, op: int) -> int:
-        i = bisect.bisect_right(self._starts, op) - 1
+        i = int(np.searchsorted(self._starts_arr, op, side="right")) - 1
         return max(0, min(i, len(self.layers) - 1))
 
+    def layers_of(self, ops: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`layer_of` for an array of op indices."""
+        i = np.searchsorted(self._starts_arr, ops, side="right") - 1
+        return np.clip(i, 0, max(len(self.layers) - 1, 0))
+
     def t_swap(self, nbytes: int) -> float:
-        if self.bwmodel is not None and self.bwmodel.is_calibrated:
-            return self.bwmodel.transfer_time(nbytes)     # measured curve
-        return nbytes / self.bandwidth                    # Eq. 3 constant
+        ts = self._tswap_cache.get(nbytes)
+        if ts is None:
+            if self.bwmodel is not None and self.bwmodel.is_calibrated:
+                ts = self.bwmodel.transfer_time(nbytes)   # measured curve
+            else:
+                ts = nbytes / self.bandwidth              # Eq. 3 constant
+            self._tswap_cache[nbytes] = ts
+        return ts
 
     # -------------------------------------------------- §5.4.1 swap-in
     def place_swap_in(self, cand: Candidate) -> Optional[PolicyEntry]:
         t = cand.tensor
         ts = self.t_swap(t.nbytes)
         first_use_layer = self.layer_of(t.death)
-        peak_layer = self.layer_of(self.peak_op)
-        for li in range(first_use_layer - 1, peak_layer, -1):
-            lay = self.layers[li]
-            if lay.remaining_time > ts:
-                lay.remaining_time -= ts
-                lay.candidates.append(t.uid)
-                e = PolicyEntry(t.uid, t.site, t.layer, t.nbytes, t.birth,
-                                t.death, swap_in_op=lay.start_op,
-                                score=cand.score)
-                e._t_swap = ts
-                return e
-        return None
+        # backward search over (peak_layer, first_use_layer): one
+        # flatnonzero over the budget slice, picking the latest fit
+        lo = self._peak_layer + 1
+        fit = np.flatnonzero(self._remaining[lo:first_use_layer] > ts)
+        if fit.size == 0:
+            return None
+        li = lo + int(fit[-1])
+        lay = self.layers[li]
+        self._remaining[li] -= ts
+        lay.candidates.append(t.uid)
+        e = PolicyEntry(t.uid, t.site, t.layer, t.nbytes, t.birth,
+                        t.death, swap_in_op=lay.start_op,
+                        score=cand.score)
+        e._t_swap = ts
+        return e
 
     def place_stalled(self, cand: Candidate) -> PolicyEntry:
         """Fallback: swap anyway right before first use, accept the stall."""
@@ -152,8 +201,8 @@ class Simulator:
         ts = self.t_swap(t.nbytes)
         li = max(self.layer_of(t.death) - 1, 0)
         lay = self.layers[li]
-        stall = max(0.0, ts - max(lay.remaining_time, 0.0))
-        lay.remaining_time -= ts
+        stall = max(0.0, ts - max(self._remaining[li], 0.0))
+        self._remaining[li] -= ts
         lay.candidates.append(t.uid)
         self.stall_time += stall
         e = PolicyEntry(t.uid, t.site, t.layer, t.nbytes, t.birth, t.death,
@@ -189,18 +238,22 @@ class Simulator:
 
     # ------------------------------------------------ §5.4.2 swap-out
     def set_free_time(self, entries: List[PolicyEntry]) -> None:
-        for e in sorted(entries, key=lambda e: e.birth):
+        if not entries:
+            return
+        order = sorted(entries, key=lambda e: e.birth)
+        lis = self.layers_of(
+            np.fromiter((e.birth for e in order), np.int64, len(order)))
+        for e, li in zip(order, lis):
             ts = self.t_swap(e.nbytes)
-            li = self.layer_of(e.birth)
-            done = None
-            for lj in range(li, len(self.layers)):
-                lay = self.layers[lj]
-                if lay.remaining_time > ts:
-                    lay.remaining_time -= ts
-                    done = lay
-                    break
-            if done is None:      # saturated: completes at end of fwd stream
-                done = self.layers[self.layer_of(self.peak_op)]
+            li = int(li)
+            # forward search: earliest layer from birth with spare budget
+            fit = np.flatnonzero(self._remaining[li:] > ts)
+            if fit.size:
+                lj = li + int(fit[0])
+                self._remaining[lj] -= ts
+                done = self.layers[lj]
+            else:                 # saturated: completes at end of fwd stream
+                done = self.layers[self._peak_layer]
             e.swap_out_done_op = done.end_op
 
     # --------------------------------------------------------- reporting

@@ -15,7 +15,7 @@ from typing import Optional
 import numpy as np
 
 from repro.common.config import ChameleonConfig
-from repro.core.tokenizer import similarity
+from repro.core.tokenizer import Signature, sig_similarity
 
 
 class Stage(enum.Enum):
@@ -29,15 +29,20 @@ class StageMachine:
     cfg: ChameleonConfig
     stage: Stage = Stage.WARMUP
     stable_step: int = 0
-    prev_seq: Optional[np.ndarray] = None
+    prev_seq: Optional[Signature] = None
     transitions: list = field(default_factory=list)
     # per-adaptation override of Algo 1's `n` (None -> cfg value): a
     # policystore warm start shrinks the GenPolicy variant search to the
     # seeded knobs instead of the full five
     n_genpolicy: Optional[int] = None
 
-    def observe(self, op_seq: np.ndarray, step: int = -1) -> Stage:
-        """Algo 1: feed one iteration's operator sequence."""
+    def observe(self, op_seq, step: int = -1) -> Stage:
+        """Algo 1: feed one iteration's operator sequence — either a raw
+        token array or an (incrementally maintained) ``Signature``.  With
+        signatures the length-diff + cosine test runs in histogram space:
+        O(changed dispatches) steady state, never O(n_ops)."""
+        if not isinstance(op_seq, Signature):
+            op_seq = Signature.from_tokens(np.asarray(op_seq))
         if self.prev_seq is None:
             self.prev_seq = op_seq
             self._log(step, "init", self.stage)
@@ -45,7 +50,7 @@ class StageMachine:
 
         n_gen = (self.n_genpolicy if self.n_genpolicy is not None
                  else self.cfg.n_genpolicy_steps)
-        len_diff, cos = similarity(op_seq, self.prev_seq)
+        len_diff, cos = sig_similarity(op_seq, self.prev_seq)
         stable = (len_diff < self.cfg.len_change_threshold
                   and cos > self.cfg.cos_sim_threshold)
         prev_stage = self.stage

@@ -9,15 +9,40 @@ token stream matches the physical device op stream), and the per-iteration
 sequence is the concatenation of every jitted function the training loop
 dispatched that iteration (fwd/bwd, optimizer, optional eval, ...) — the JAX
 analogue of the eager dispatch stream.
+
+Steady-state cost model (the Table-1 "always on" constraint): the
+per-iteration signature is **not** rebuilt from scratch.  Each dispatch's
+stream is tokenized once into a :class:`TokenStream` carrying its operator
+histogram and a content hash; a :class:`SignatureAccumulator` keeps the
+iteration histogram + length *incrementally*, touching only the dispatch
+slots whose content hash changed.  An unchanged iteration therefore costs a
+handful of hash compares — O(changed dispatches), not O(n_ops).
+
+Scan bodies repeat the same tokens ``length`` times; materializing more
+than :data:`REPEAT_CAP` copies per equation buys no information, so the
+materialized stream is capped while ``virtual_len`` and the histogram keep
+the true run-length-aware multiplicities.  Length-diff detection (a
+deep-scan layer-count change, say 80 -> 96 layers) stays exact even though
+both variants materialize identically.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Tuple
+import hashlib
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 # primitives whose sub-jaxpr we expand inline
 _SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+# max materialized copies of a scan-replicated token per equation; virtual
+# length and histograms always use the true multiplicity
+REPEAT_CAP = 64
+
+# degenerate-token-id guard: histogram buffers never grow past this many
+# bins — ids above (corrupt streams, foreign vocabularies) collapse into
+# the last bin instead of sizing a multi-GiB bincount buffer
+MAX_DENSE_TOKEN = 1 << 20
 
 
 class OpVocab:
@@ -58,12 +83,64 @@ def _unwrap(j):
     return j.jaxpr if hasattr(j, "jaxpr") else j
 
 
-def tokenize_jaxpr(jaxpr, vocab: OpVocab = GLOBAL_VOCAB,
-                   max_ops: int = 2_000_000) -> np.ndarray:
-    """Flatten a (closed) jaxpr into an int32 token stream, unrolling scans."""
+def _clip_tokens(tokens: np.ndarray) -> np.ndarray:
+    """Collapse degenerate huge ids into the last dense bin."""
+    if tokens.size and int(tokens.max(initial=0)) > MAX_DENSE_TOKEN:
+        return np.minimum(tokens, MAX_DENSE_TOKEN)
+    return tokens
+
+
+def token_histogram(tokens: np.ndarray,
+                    minlength: int = 0) -> np.ndarray:
+    """Bounded-size int64 operator-count histogram of a token array."""
+    if tokens.size == 0:
+        return np.zeros(max(minlength, 1), np.int64)
+    return np.bincount(_clip_tokens(tokens),
+                       minlength=minlength).astype(np.int64)
+
+
+class TokenStream:
+    """One dispatch's tokenized op stream plus its monitoring metadata.
+
+    ``tokens`` is the materialized stream (scan repeats capped at
+    :data:`REPEAT_CAP` per equation); ``virtual_len`` and ``hist`` carry
+    the *true* run-length-aware op count and per-operator multiplicities,
+    which is what similarity/length-diff detection must see.
+    ``content_hash`` identifies the true stream (two streams whose capped
+    materializations collide but whose virtual multiplicities differ hash
+    differently).
+    """
+
+    __slots__ = ("tokens", "virtual_len", "hist", "content_hash")
+
+    def __init__(self, tokens: np.ndarray, virtual_len: Optional[int] = None,
+                 hist: Optional[np.ndarray] = None):
+        self.tokens = np.asarray(tokens, np.int32)
+        self.virtual_len = (int(self.tokens.size) if virtual_len is None
+                            else int(virtual_len))
+        self.hist = (token_histogram(self.tokens) if hist is None
+                     else np.asarray(hist, np.int64))
+        h = hashlib.blake2b(digest_size=16)
+        h.update(self.tokens.tobytes())
+        h.update(self.virtual_len.to_bytes(8, "little"))
+        h.update(np.ascontiguousarray(self.hist).tobytes())
+        self.content_hash = h.digest()
+
+    def __len__(self):
+        return self.virtual_len
+
+
+def tokenize_jaxpr_stream(jaxpr, vocab: OpVocab = GLOBAL_VOCAB,
+                          max_ops: int = 2_000_000) -> TokenStream:
+    """Flatten a (closed) jaxpr into a :class:`TokenStream`, unrolling
+    scans virtually: the materialized array caps per-equation repeats at
+    :data:`REPEAT_CAP`, the histogram and virtual length do not."""
     toks: List[int] = []
+    counts: Dict[int, int] = {}
+    virtual = 0
 
     def walk(j, mult: int):
+        nonlocal virtual
         j = _unwrap(j)
         for eqn in j.eqns:
             name = eqn.primitive.name
@@ -78,20 +155,160 @@ def tokenize_jaxpr(jaxpr, vocab: OpVocab = GLOBAL_VOCAB,
                     walk(s, mult)
                 continue
             tok = vocab.id(name)
-            toks.extend([tok] * mult if mult <= 64 else [tok] * 64)
+            toks.extend([tok] * min(mult, REPEAT_CAP))
+            counts[tok] = counts.get(tok, 0) + mult
+            virtual += mult
             if len(toks) > max_ops:
                 raise RuntimeError("op stream too long")
 
     walk(jaxpr, 1)
-    return np.asarray(toks, np.int32)
+    tokens = np.asarray(toks, np.int32)
+    size = (max(min(t, MAX_DENSE_TOKEN) for t in counts) + 1) if counts else 1
+    hist = np.zeros(size, np.int64)
+    for tok, c in counts.items():
+        hist[min(tok, MAX_DENSE_TOKEN)] += c
+    return TokenStream(tokens, virtual_len=virtual, hist=hist)
 
 
-def sequence_signature(token_streams: Iterable[np.ndarray]) -> np.ndarray:
-    """Concatenate the per-dispatch token streams of one iteration."""
-    streams = [s for s in token_streams if s.size]
-    if not streams:
+def tokenize_jaxpr(jaxpr, vocab: OpVocab = GLOBAL_VOCAB,
+                   max_ops: int = 2_000_000) -> np.ndarray:
+    """Materialized int32 token stream (back-compat array form)."""
+    return tokenize_jaxpr_stream(jaxpr, vocab, max_ops).tokens
+
+
+# --------------------------------------------------------------- signatures
+class Signature:
+    """One iteration's op-sequence signature in histogram space.
+
+    Carries the (virtual) length and operator-count histogram that Algo 1's
+    length-diff + cosine test needs, plus an optional identity ``key`` (the
+    tuple of per-dispatch content hashes) that lets an unchanged iteration
+    short-circuit to (0, 1) without touching any array.  ``materialize()``
+    concatenates the underlying token arrays lazily — only episodic
+    consumers (fingerprinting at store time) pay for it.
+    """
+
+    __slots__ = ("length", "hist", "key", "_streams", "_tokens", "_norm")
+
+    def __init__(self, length: int, hist: np.ndarray,
+                 key: Optional[tuple] = None,
+                 streams: Optional[List[TokenStream]] = None):
+        self.length = int(length)
+        self.hist = hist
+        self.key = key
+        self._streams = streams
+        self._tokens: Optional[np.ndarray] = None
+        self._norm: Optional[float] = None
+
+    @classmethod
+    def from_tokens(cls, tokens: np.ndarray) -> "Signature":
+        tokens = np.asarray(tokens)
+        sig = cls(tokens.size, token_histogram(tokens))
+        sig._tokens = tokens.astype(np.int32, copy=False)
+        return sig
+
+    @property
+    def norm(self) -> float:
+        if self._norm is None:
+            self._norm = float(np.linalg.norm(self.hist.astype(np.float64)))
+        return self._norm
+
+    def materialize(self) -> np.ndarray:
+        """Concatenated (capped) token stream of the iteration."""
+        if self._tokens is None:
+            arrs = [s.tokens for s in (self._streams or []) if s.tokens.size]
+            self._tokens = (np.concatenate(arrs) if arrs
+                            else np.zeros((0,), np.int32))
+        return self._tokens
+
+    def __len__(self):
+        return self.length
+
+
+class SignatureAccumulator:
+    """Maintains the iteration signature incrementally.
+
+    ``update`` diffs the new dispatch-stream list against the previous one
+    by content hash and applies histogram/length deltas only for the slots
+    that changed — the steady-state iteration (everything cached upstream)
+    does a handful of 16-byte compares and no array work.  The counters
+    make the O(changed dispatches) claim testable: ``update_tokens`` grows
+    only by the virtual length of streams actually re-accumulated.
+    """
+
+    def __init__(self):
+        self._prev: List[TokenStream] = []
+        self._hist = np.zeros(1, np.int64)
+        self._length = 0
+        self.iterations = 0
+        self.changed_slots = 0
+        self.update_tokens = 0
+
+    # ---- delta application
+    def _grow(self, n: int) -> None:
+        if n > self._hist.size:
+            self._hist = np.concatenate(
+                [self._hist, np.zeros(n - self._hist.size, np.int64)])
+
+    def _apply(self, stream: TokenStream, sign: int) -> None:
+        self._grow(stream.hist.size)
+        self._hist[: stream.hist.size] += sign * stream.hist
+        self._length += sign * stream.virtual_len
+        self.update_tokens += stream.virtual_len
+
+    def update(self, streams: List[TokenStream]) -> Signature:
+        self.iterations += 1
+        prev = self._prev
+        for i in range(max(len(prev), len(streams))):
+            old = prev[i] if i < len(prev) else None
+            new = streams[i] if i < len(streams) else None
+            if (old is not None and new is not None
+                    and old.content_hash == new.content_hash):
+                continue
+            self.changed_slots += 1
+            if old is not None:
+                self._apply(old, -1)
+            if new is not None:
+                self._apply(new, +1)
+        self._prev = list(streams)
+        return Signature(self._length, self._hist.copy(),
+                         key=tuple(s.content_hash for s in streams),
+                         streams=list(streams))
+
+    def stats(self) -> dict:
+        return {"iterations": self.iterations,
+                "changed_slots": self.changed_slots,
+                "update_tokens": self.update_tokens}
+
+
+def sequence_signature(token_streams: Iterable) -> np.ndarray:
+    """Concatenate per-dispatch token streams (arrays or TokenStreams) of
+    one iteration into the materialized array form."""
+    arrs = [s.tokens if isinstance(s, TokenStream) else s
+            for s in token_streams]
+    arrs = [a for a in arrs if a.size]
+    if not arrs:
         return np.zeros((0,), np.int32)
-    return np.concatenate(streams)
+    return np.concatenate(arrs)
+
+
+# --------------------------------------------------------------- similarity
+def sig_similarity(a: Signature, b: Signature) -> Tuple[float, float]:
+    """(relative length difference, histogram cosine) between two
+    iteration signatures.  Identical content keys short-circuit without
+    touching any array — the steady-state path."""
+    if a.key is not None and a.key == b.key:
+        return 0.0, 1.0
+    la, lb = a.length, b.length
+    if la == 0 and lb == 0:
+        return 0.0, 1.0
+    if la == 0 or lb == 0:
+        return 1.0, 0.0
+    len_diff = abs(la - lb) / max(la, lb)
+    m = min(a.hist.size, b.hist.size)
+    denom = a.norm * b.norm
+    cos = float(a.hist[:m] @ b.hist[:m] / denom) if denom else 0.0
+    return len_diff, cos
 
 
 def similarity(a: np.ndarray, b: np.ndarray) -> Tuple[float, float]:
@@ -99,16 +316,18 @@ def similarity(a: np.ndarray, b: np.ndarray) -> Tuple[float, float]:
 
     Cosine is computed on the operator-count histogram, which is the
     length-robust form of the paper's tensor cosine (identical when
-    lengths match and ops only reorder/extend)."""
+    lengths match and ops only reorder/extend).  Histogram buffers are
+    bounded: token ids above :data:`MAX_DENSE_TOKEN` collapse into one bin
+    instead of sizing the bincount by the largest id seen."""
     la, lb = len(a), len(b)
     if la == 0 and lb == 0:
         return 0.0, 1.0
     if la == 0 or lb == 0:
         return 1.0, 0.0
     len_diff = abs(la - lb) / max(la, lb)
-    n = int(max(a.max(initial=0), b.max(initial=0))) + 1
-    ha = np.bincount(a, minlength=n).astype(np.float64)
-    hb = np.bincount(b, minlength=n).astype(np.float64)
-    denom = np.linalg.norm(ha) * np.linalg.norm(hb)
-    cos = float(ha @ hb / denom) if denom else 0.0
+    ha, hb = token_histogram(a), token_histogram(b)
+    m = min(ha.size, hb.size)
+    denom = np.linalg.norm(ha.astype(np.float64)) * \
+        np.linalg.norm(hb.astype(np.float64))
+    cos = float(ha[:m] @ hb[:m] / denom) if denom else 0.0
     return len_diff, cos

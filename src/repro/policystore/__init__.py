@@ -27,16 +27,21 @@ from __future__ import annotations
 
 from repro.policystore.drift import (DriftClassifier, DriftDecision, Tier,
                                      bandwidth_drift)
-from repro.policystore.fingerprint import (Fingerprint, fingerprint_profile,
+from repro.policystore.fingerprint import (Fingerprint,
+                                           clear_fingerprint_cache,
+                                           fingerprint_profile,
+                                           fingerprint_signature,
                                            fingerprint_tokens,
                                            jaccard_estimate, length_ratio,
                                            minhash_signature, similarity)
+from repro.policystore.lshindex import LSHIndex
 from repro.policystore.store import (SCHEMA_VERSION, PolicyRecord,
                                      PolicyStore)
 
 __all__ = [
-    "DriftClassifier", "DriftDecision", "Fingerprint", "PolicyRecord",
-    "PolicyStore", "SCHEMA_VERSION", "Tier", "bandwidth_drift",
-    "fingerprint_profile", "fingerprint_tokens", "jaccard_estimate",
+    "DriftClassifier", "DriftDecision", "Fingerprint", "LSHIndex",
+    "PolicyRecord", "PolicyStore", "SCHEMA_VERSION", "Tier",
+    "bandwidth_drift", "clear_fingerprint_cache", "fingerprint_profile",
+    "fingerprint_signature", "fingerprint_tokens", "jaccard_estimate",
     "length_ratio", "minhash_signature", "similarity",
 ]

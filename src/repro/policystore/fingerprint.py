@@ -24,6 +24,7 @@ reuse/warm-start/regen decision is made.
 """
 from __future__ import annotations
 
+import collections
 import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, Optional
@@ -40,12 +41,20 @@ _SHINGLE_BASE = np.uint64(1_000_003)
 _CHUNK = 1 << 16                      # windows hashed per vectorized block
 
 
+_PERM_CACHE: Dict[int, np.ndarray] = {}
+
+
 def _permutations(n_perms: int) -> np.ndarray:
-    """(2, n_perms, 1) uint64 [a; b] for h -> (a*h + b) mod p."""
-    rng = np.random.RandomState(_PERM_SEED)
-    a = rng.randint(1, _MERSENNE, size=n_perms).astype(np.uint64)
-    b = rng.randint(0, _MERSENNE, size=n_perms).astype(np.uint64)
-    return np.stack([a, b])[:, :, None]
+    """(2, n_perms, 1) uint64 [a; b] for h -> (a*h + b) mod p (memoized —
+    the bank is fixed-seed, so one materialization per perm count)."""
+    bank = _PERM_CACHE.get(n_perms)
+    if bank is None:
+        rng = np.random.RandomState(_PERM_SEED)
+        a = rng.randint(1, _MERSENNE, size=n_perms).astype(np.uint64)
+        b = rng.randint(0, _MERSENNE, size=n_perms).astype(np.uint64)
+        bank = np.stack([a, b])[:, :, None]
+        _PERM_CACHE[n_perms] = bank
+    return bank
 
 
 def _shingle_hashes(tokens: np.ndarray, shingle: int) -> np.ndarray:
@@ -110,30 +119,93 @@ class Fingerprint:
 
 
 def _exact_hash(tokens: np.ndarray, site_bytes: Dict[str, int],
-                cand_bytes: int) -> str:
+                cand_bytes: int, extra: bytes = b"") -> str:
     h = hashlib.sha1()
     h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
     for k in sorted(site_bytes):
         h.update(f"{k}={site_bytes[k]};".encode())
     h.update(str(cand_bytes).encode())
+    h.update(extra)
     return h.hexdigest()
+
+
+# sketch memo: the monitoring loop re-fingerprints *recurring* streams
+# (train/eval interleaves, seq-len bucket cycling) — the exact hash is
+# cheap (one sha1 over the token bytes) and fully determines the sketch,
+# so the shingling/MinHash/unique work runs once per distinct stream.
+_FP_CACHE: "collections.OrderedDict[tuple, Fingerprint]" = \
+    collections.OrderedDict()
+_FP_CACHE_MAX = 256
+
+
+def clear_fingerprint_cache() -> None:
+    _FP_CACHE.clear()
 
 
 def fingerprint_tokens(tokens: np.ndarray,
                        site_bytes: Optional[Dict[str, int]] = None,
-                       n_perms: int = 64, shingle: int = 4) -> Fingerprint:
+                       n_perms: int = 64, shingle: int = 4,
+                       cache: bool = True,
+                       virtual_len: Optional[int] = None,
+                       histogram: Optional[Dict[int, int]] = None
+                       ) -> Fingerprint:
+    """Sketch one token stream.
+
+    ``virtual_len``/``histogram`` carry the *true* run-length-aware
+    accounting when ``tokens`` is a REPEAT_CAP-capped materialization
+    (``tokenizer.Signature``): the exact hash, length, and histogram then
+    reflect the virtual stream — two deep-scan variants whose capped
+    materializations collide (80 vs 96 layers) must not fingerprint
+    identically.  When the virtual accounting matches the materialized
+    stream the fingerprint is bit-identical to the plain form, so
+    iteration fingerprints still exact-hit prepare fingerprints of the
+    same program.  MinHash stays on the materialized stream — shingle
+    *sets* saturate after one scan repeat, so the cap cannot change them.
+    """
     tokens = np.asarray(tokens, np.int32)
     site_bytes = dict(site_bytes or {})
     cand_bytes = sum(site_bytes.values())
-    hist: Dict[int, int] = {}
-    if tokens.size:
+    length = int(tokens.size) if virtual_len is None else int(virtual_len)
+    extra = b""
+    if length != tokens.size:
+        # capped materialization: hash the virtual accounting too (the
+        # true histogram can only diverge from the stream when it did)
+        hist_ser = ",".join(f"{k}:{v}"
+                            for k, v in sorted((histogram or {}).items()))
+        extra = f"vlen={length};hist={hist_ser}".encode()
+    exact = _exact_hash(tokens, site_bytes, cand_bytes, extra)
+    key = (exact, n_perms, shingle)
+    if cache:
+        hit = _FP_CACHE.get(key)
+        if hit is not None:
+            _FP_CACHE.move_to_end(key)
+            return hit
+    hist: Dict[int, int] = dict(histogram or {})
+    if not hist and tokens.size:
         vals, counts = np.unique(tokens, return_counts=True)
         hist = {int(v): int(c) for v, c in zip(vals, counts)}
-    return Fingerprint(
-        exact=_exact_hash(tokens, site_bytes, cand_bytes),
-        length=int(tokens.size),
+    fp = Fingerprint(
+        exact=exact,
+        length=length,
         minhash=minhash_signature(tokens, n_perms=n_perms, shingle=shingle),
         histogram=hist, site_bytes=site_bytes, cand_bytes=cand_bytes)
+    if cache:
+        _FP_CACHE[key] = fp
+        while len(_FP_CACHE) > _FP_CACHE_MAX:
+            _FP_CACHE.popitem(last=False)
+    return fp
+
+
+def fingerprint_signature(sig, n_perms: int = 64, shingle: int = 4,
+                          cache: bool = True) -> Fingerprint:
+    """Fingerprint an iteration :class:`~repro.core.tokenizer.Signature`:
+    the materialized (capped) stream for shingling plus the signature's
+    virtual length and true histogram for the exact/length/histogram
+    layers."""
+    hist = {int(i): int(c) for i, c in enumerate(sig.hist) if c}
+    return fingerprint_tokens(sig.materialize(), n_perms=n_perms,
+                              shingle=shingle, cache=cache,
+                              virtual_len=len(sig), histogram=hist)
 
 
 def fingerprint_profile(prof, n_perms: int = 64,

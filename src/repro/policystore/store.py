@@ -22,6 +22,18 @@ directory is configured, mirrors each record to one JSON file
 (``<key>.json``, atomic tmp+rename writes).  Loads are corruption-safe —
 an unreadable or schema-incompatible file is skipped and counted, never
 fatal — and eviction removes the disk file with the memory entry.
+
+``nearest`` is sublinear: an LSH band-bucket index over the MinHash
+signatures (``lshindex.py``, persisted as ``lsh.index`` next to the
+records and rebuilt when missing, corrupt, or out of sync) shortlists
+probable matches; only when the probe finds nothing reuse-grade does a
+vectorized fallback run — one numpy pass computes a per-record *upper
+bound* on the calibrated similarity (Jaccard + length terms, optimistic
+histogram terms), and exact scoring proceeds in decreasing-bound order,
+stopping as soon as the bound cannot beat the best hit.  The result is
+identical to the exhaustive scan whenever the exhaustive best is below
+the reuse threshold, and reuse-grade otherwise; ``n_sim_evals`` counts
+full similarity evaluations so tests can assert probe work ≪ records.
 """
 from __future__ import annotations
 
@@ -32,7 +44,10 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.policystore.fingerprint import Fingerprint, similarity
+from repro.policystore.lshindex import LSHIndex
 
 SCHEMA_VERSION = 1
 
@@ -205,8 +220,14 @@ class PolicyStore:
         self.n_lookups = self.n_exact_hits = self.n_sim_hits = 0
         self.n_misses = self.n_evictions = 0
         self.n_loaded = self.n_corrupt = 0
+        self.n_sim_evals = self.n_index_rebuilds = 0
+        self.index = LSHIndex(int(getattr(cfg, "minhash_perms", 64)),
+                              int(getattr(cfg, "lsh_bands", 16)))
+        self._rows_dirty = True
+        self._index_dirty_puts = 0
         if self.dir:
             self._load_dir()
+            self._attach_index()
 
     # ----------------------------------------------------------- loading
     def _load_dir(self) -> None:
@@ -232,6 +253,61 @@ class PolicyStore:
             self.n_loaded += 1
         self._evict_over_capacity()
 
+    # ----------------------------------------------------------- lsh index
+    def _index_path(self) -> str:
+        # not *.json: record loading globs that suffix
+        return os.path.join(self.dir, "lsh.index")
+
+    def _attach_index(self) -> None:
+        """Load the persisted band index; rebuild from the records when it
+        is missing, corrupt, parameter-mismatched, or out of sync with the
+        loaded record set (e.g. another writer evicted since)."""
+        try:
+            with open(self._index_path()) as f:
+                idx = LSHIndex.from_json(json.load(f))
+            if (idx.n_perms == self.index.n_perms
+                    and idx.n_bands == self.index.n_bands
+                    and idx.keys() == set(self._records)):
+                self.index = idx
+                return
+        except (OSError, ValueError, KeyError, TypeError,
+                json.JSONDecodeError):
+            pass
+        self._rebuild_index()
+
+    def _rebuild_index(self) -> None:
+        self.index.clear()
+        for key, rec in self._records.items():
+            self.index.add(key, (rec.prepare_fingerprint.minhash,
+                                 rec.fingerprint.minhash))
+        self.n_index_rebuilds += 1
+        self._persist_index()
+
+    def _persist_index(self) -> None:
+        if not self.dir or self.readonly:
+            return
+        os.makedirs(self.dir, exist_ok=True)
+        tmp = self._index_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.index.to_json(), f)
+        os.replace(tmp, self._index_path())
+        self._index_dirty_puts = 0
+
+    # the index file serializes every record's band digests, so writing it
+    # per put would make N inserts O(N^2) disk work at the ~1k-record scale
+    # the index exists for.  Small stores flush every put (restart never
+    # rebuilds); large ones amortize — a stale on-disk index is detected at
+    # load by the key-set check in _attach_index and rebuilt, so deferral
+    # trades a cheap rebuild-on-restart for O(1) amortized writes.
+    _INDEX_FLUSH_SMALL = 128
+    _INDEX_FLUSH_EVERY = 16
+
+    def _persist_index_amortized(self) -> None:
+        self._index_dirty_puts += 1
+        if (len(self._records) <= self._INDEX_FLUSH_SMALL
+                or self._index_dirty_puts >= self._INDEX_FLUSH_EVERY):
+            self._persist_index()
+
     # ------------------------------------------------------------ writes
     def _path(self, key: str) -> str:
         return os.path.join(self.dir, f"{key}.json")
@@ -248,6 +324,8 @@ class PolicyStore:
     def _evict_over_capacity(self) -> None:
         while len(self._records) > self.max_records:
             key, _ = self._records.popitem(last=False)
+            self.index.remove(key)
+            self._rows_dirty = True
             self.n_evictions += 1
             if self.dir and not self.readonly:
                 try:
@@ -258,8 +336,12 @@ class PolicyStore:
     def put(self, rec: PolicyRecord) -> None:
         self._records[rec.key] = rec
         self._records.move_to_end(rec.key)
+        self.index.add(rec.key, (rec.prepare_fingerprint.minhash,
+                                 rec.fingerprint.minhash))
+        self._rows_dirty = True
         self._evict_over_capacity()
         self._persist(rec)
+        self._persist_index_amortized()
 
     def touch(self, rec: PolicyRecord) -> None:
         """Record a use: bumps LRU recency and the use counter.  The disk
@@ -280,17 +362,121 @@ class PolicyStore:
     def get_exact(self, key: str) -> Optional[PolicyRecord]:
         return self._records.get(key)
 
+    # ---- flat row views for the vectorized fallback (2 rows per record:
+    # prepare + iteration fingerprint), rebuilt lazily after mutations
+    def _ensure_rows(self) -> None:
+        if not self._rows_dirty:
+            return
+        w = self.index.n_perms
+        keys: List[str] = []
+        sigs: List[np.ndarray] = []
+        lens: List[int] = []
+        has_site: List[bool] = []
+        sig_ok: List[bool] = []
+        for key, rec in self._records.items():
+            for f in (rec.prepare_fingerprint, rec.fingerprint):
+                keys.append(key)
+                lens.append(int(f.length))
+                has_site.append(bool(f.site_bytes))
+                if f.minhash.size == w:
+                    sigs.append(f.minhash)
+                    sig_ok.append(True)
+                else:                       # foreign perm count: never prune
+                    sigs.append(np.zeros(w, np.int64))
+                    sig_ok.append(False)
+        self._row_keys = keys
+        self._row_sigs = (np.stack(sigs) if sigs
+                          else np.zeros((0, w), np.int64))
+        self._row_lens = np.asarray(lens, np.float64)
+        self._row_site = np.asarray(has_site, bool)
+        self._row_ok = np.asarray(sig_ok, bool)
+        self._rows_dirty = False
+
+    def _upper_bounds(self, fp: Fingerprint) -> np.ndarray:
+        """Per-row upper bound on the calibrated similarity: exact Jaccard
+        estimate and length ratio, histogram/site terms assumed perfect.
+        Rows the bound cannot cover (signature width mismatch) get 1.0."""
+        n = len(self._row_keys)
+        if fp.minhash.size == self.index.n_perms and n:
+            jac = (self._row_sigs == fp.minhash[None, :]).mean(axis=1)
+        else:
+            jac = np.ones(n)
+        fl = float(fp.length)
+        lens = self._row_lens
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lr = np.where((lens <= 0) & (fl <= 0), 1.0,
+                          np.where((lens <= 0) | (fl <= 0), 0.0,
+                                   np.minimum(lens, fl)
+                                   / np.maximum(np.maximum(lens, fl), 1e-12)))
+        ub_token = 0.45 * jac + 0.25 * lr + 0.30
+        ub_prof = 0.40 * jac + 0.20 * lr + 0.40
+        ub = np.where(self._row_site & bool(fp.site_bytes), ub_prof, ub_token)
+        ub = np.where(self._row_ok, ub, 1.0)
+        return ub + 1e-9                    # absorb float rounding slack
+
     def nearest(self, fp: Fingerprint) -> Tuple[Optional[PolicyRecord], float]:
         """Best-matching record and its calibrated similarity: each record
         is reachable through either of its two fingerprints (max taken).
         A best match below the warm-start floor is counted as a miss —
         it cannot influence adaptation, so reporting it as a hit would
-        make a never-matching cache look warm."""
+        make a never-matching cache look warm.
+
+        Lookup is LSH-first: band-bucket collisions are scored exactly,
+        and if a reuse-grade match surfaces the scan stops there (probe
+        work ≪ records).  Otherwise the vectorized bounded fallback
+        recovers the exact exhaustive-scan result."""
         self.n_lookups += 1
         hit = self._records.get(fp.exact)   # O(1) fast path (keys are
         if hit is not None:                 # prepare-fingerprint hashes)
             self.n_exact_hits += 1
             return hit, 1.0
+        floor = getattr(self.cfg, "warm_threshold", 0.0)
+        if not self._records:
+            self.n_misses += 1
+            return None, 0.0
+        reuse_floor = getattr(self.cfg, "reuse_threshold", 1.0)
+        scored: Dict[str, float] = {}
+
+        def _score(key: str) -> float:
+            rec = self._records[key]
+            s = max(similarity(fp, rec.prepare_fingerprint),
+                    similarity(fp, rec.fingerprint))
+            self.n_sim_evals += 1
+            scored[key] = s
+            return s
+
+        best: Optional[PolicyRecord] = None
+        best_sim = 0.0
+        for key in self.index.query(fp.minhash):
+            if key not in self._records:
+                continue
+            s = _score(key)
+            if s > best_sim or best is None:
+                best, best_sim = self._records[key], s
+        if best is None or best_sim < reuse_floor:
+            self._ensure_rows()
+            ub = self._upper_bounds(fp)
+            for ri in np.argsort(-ub):
+                if best is not None and ub[ri] <= best_sim:
+                    break                   # bounds sorted: nothing beats it
+                key = self._row_keys[ri]
+                if key in scored:
+                    continue
+                s = _score(key)
+                if s > best_sim or best is None:
+                    best, best_sim = self._records[key], s
+        if best is None or best_sim < floor:
+            self.n_misses += 1
+        elif best_sim >= 1.0:
+            self.n_exact_hits += 1
+        else:
+            self.n_sim_hits += 1
+        return best, best_sim
+
+    def nearest_exhaustive(
+            self, fp: Fingerprint) -> Tuple[Optional[PolicyRecord], float]:
+        """Reference O(records) scan — the parity oracle for the LSH path
+        (tests/benchmarks).  Does not touch hit counters."""
         best: Optional[PolicyRecord] = None
         best_sim = 0.0
         for rec in self._records.values():
@@ -298,13 +484,6 @@ class PolicyStore:
                       similarity(fp, rec.fingerprint))
             if sim > best_sim or best is None:
                 best, best_sim = rec, sim
-        floor = getattr(self.cfg, "warm_threshold", 0.0)
-        if best is None or best_sim < floor:
-            self.n_misses += 1
-        elif best_sim >= 1.0:
-            self.n_exact_hits += 1
-        else:
-            self.n_sim_hits += 1
         return best, best_sim
 
     # ------------------------------------------------------------- misc
@@ -325,4 +504,7 @@ class PolicyStore:
             "evictions": self.n_evictions,
             "loaded": self.n_loaded,
             "corrupt_skipped": self.n_corrupt,
+            "sim_evals": self.n_sim_evals,
+            "index_rebuilds": self.n_index_rebuilds,
+            "index": self.index.stats(),
         }

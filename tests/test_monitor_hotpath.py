@@ -1,0 +1,490 @@
+"""Monitoring hot-path tests (ISSUE 5).
+
+Three families:
+
+  * **parity** — the vectorized implementations must produce *identical*
+    results to their kept reference implementations on randomized inputs
+    (``match_instances`` vs ``match_instances_reference``, incremental
+    ``SignatureAccumulator`` vs from-scratch concat+bincount, LSH-probed
+    ``nearest`` vs ``nearest_exhaustive``);
+  * **satellites** — the scan-replication cap no longer hides deep-scan
+    layer-count changes (virtual length stays exact), and degenerate
+    token ids cannot size histogram buffers;
+  * **guards** — deterministic operation-count invariants for CI: the
+    signature update does work proportional to *changed* dispatches, and
+    ``nearest`` at 1k records evaluates far fewer similarities than the
+    record count (probe count ≪ records).  These are counters, not
+    wall-clock, so they hold on shared runners.
+"""
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import ChameleonConfig, PolicyStoreConfig
+from repro.core import tokenizer
+from repro.core.matching import (candidate_feature_arrays, match_instances,
+                                 match_instances_reference)
+from repro.core.profiler import ProfileData, TensorInstance
+from repro.core.simulator import Simulator
+from repro.core.stages import Stage, StageMachine
+from repro.policystore import (LSHIndex, PolicyRecord, PolicyStore,
+                               fingerprint_tokens)
+
+from tests.test_simulator_policy import synth_profile
+
+SITES = ("attn_out", "ffn_pre", "resid_post", "qkv_proj", "moe_gate")
+
+
+# ------------------------------------------------------------------ helpers
+def _rand_profile(seed, n_sites, n_layers, per, jitter, dtype_seed):
+    r = np.random.RandomState(seed)
+    tensors = []
+    uid = 0
+    n_ops = max(n_sites * n_layers * per, 1)
+    for s in range(n_sites):
+        shape = (32 + s, 8 * (1 + s % 3))
+        for l in range(n_layers):
+            birth = min((s * n_layers + l) * per
+                        + int(r.randint(0, jitter + 1)), n_ops - 1)
+            tensors.append(TensorInstance(
+                uid, 1 << 16, birth, n_ops - birth, site=SITES[s % len(SITES)],
+                layer=l, dtype_code=1 + (s + dtype_seed) % 3, shape=shape))
+            uid += 1
+    # a few duplicate-feature instances exercise the greedy bucket order
+    for extra in range(min(n_layers, 3)):
+        t = tensors[extra]
+        tensors.append(TensorInstance(
+            uid, t.nbytes, min(t.birth + 1, n_ops - 1), t.death,
+            site=t.site, layer=t.layer, dtype_code=t.dtype_code,
+            shape=t.shape))
+        uid += 1
+    return ProfileData(np.zeros(n_ops, np.int32), tensors, 1.0, 0)
+
+
+def _record(fp, kind="conservative"):
+    return PolicyRecord.from_policy(
+        fingerprint=fp, prepare_fingerprint=fp, swap=None, candidates=[],
+        n_ops=max(fp.length, 1), knob=1.0, measured_t=0.1, budget=1 << 30,
+        policy_kind=kind)
+
+
+def _assert_match_parity(old, new, tol=16):
+    a = match_instances_reference(old, new, tol)
+    b = match_instances(old, new, tol)
+    assert a.mapping == b.mapping
+    assert a.unmatched == b.unmatched
+    assert a.moved == b.moved
+
+
+# ----------------------------------------------------- matching: parity
+@given(st.integers(0, 10_000), st.integers(1, 5), st.integers(1, 10),
+       st.integers(2, 16), st.integers(0, 30))
+@settings(max_examples=40, deadline=None)
+def test_match_parity_random_pairs(seed, n_sites, n_layers, per, jitter):
+    old = _rand_profile(seed, n_sites, n_layers, per, jitter=0, dtype_seed=0)
+    new = _rand_profile(seed + 1, n_sites, n_layers, per + 1, jitter=jitter,
+                        dtype_seed=0)
+    _assert_match_parity(old, new)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_match_parity_structural_drift(seed, n_sites, n_layers):
+    """Dtype changes, layer-count changes, and empty sides must agree with
+    the reference too (all-unmatched cases included)."""
+    old = _rand_profile(seed, n_sites, n_layers, 8, 0, dtype_seed=0)
+    new = _rand_profile(seed, n_sites, max(n_layers - 1, 1), 8, 2,
+                        dtype_seed=1)     # shifted dtype codes
+    _assert_match_parity(old, new)
+    empty = ProfileData(np.zeros(4, np.int32), [], 1.0, 0)
+    _assert_match_parity(old, empty)
+    _assert_match_parity(empty, new)
+
+
+def test_match_tolerance_zero_and_features_cached():
+    old = _rand_profile(3, 3, 6, 10, 0, 0)
+    new = _rand_profile(4, 3, 6, 10, 5, 0)
+    _assert_match_parity(old, new, tol=0)
+    feats = candidate_feature_arrays(old)
+    assert candidate_feature_arrays(old) is feats   # lazily cached
+    assert old.feature_arrays() is feats
+
+
+def test_feature_cache_dropped_on_tensor_replacement():
+    """dryrun's per-chip rescale shallow-copies the profile and replaces
+    ``tensors``; the derived candidate/feature caches must not leak the
+    old (unscaled) instances through the copy."""
+    import copy
+    prof = _rand_profile(5, 2, 4, 8, 0, 0)
+    _ = prof.candidates                     # populate caches
+    prof.feature_arrays()
+    prof2 = copy.copy(prof)
+    prof2.tensors = prof.tensors[:3]
+    assert len(prof2.candidates) == 3
+    assert prof2.feature_arrays().n == 3
+    assert len(prof.candidates) == len(prof.tensors)  # original intact
+
+
+# ------------------------------------------ incremental signature: parity
+@st.composite
+def _stream_lists(draw):
+    n = draw(st.integers(1, 5))
+    return [draw(st.lists(st.integers(1, 30), min_size=0, max_size=120))
+            for _ in range(n)]
+
+
+@given(_stream_lists(), _stream_lists())
+@settings(max_examples=40, deadline=None)
+def test_signature_accumulator_matches_scratch(lists_a, lists_b):
+    acc = tokenizer.SignatureAccumulator()
+    for lists in (lists_a, lists_b, lists_a):
+        streams = [tokenizer.TokenStream(np.asarray(l, np.int32))
+                   for l in lists]
+        sig = acc.update(streams)
+        concat = (np.concatenate([np.asarray(l, np.int32) for l in lists])
+                  if any(lists) else np.zeros(0, np.int32))
+        assert sig.length == concat.size
+        ref_hist = tokenizer.token_histogram(concat)
+        m = max(sig.hist.size, ref_hist.size)
+        np.testing.assert_array_equal(
+            np.pad(sig.hist, (0, m - sig.hist.size)),
+            np.pad(ref_hist, (0, m - ref_hist.size)))
+        np.testing.assert_array_equal(sig.materialize(), concat)
+
+
+@given(_stream_lists(), _stream_lists())
+@settings(max_examples=30, deadline=None)
+def test_sig_similarity_matches_legacy(lists_a, lists_b):
+    sa = tokenizer.Signature.from_tokens(np.concatenate(
+        [np.asarray(l, np.int32) for l in lists_a] or [np.zeros(0, np.int32)]))
+    sb = tokenizer.Signature.from_tokens(np.concatenate(
+        [np.asarray(l, np.int32) for l in lists_b] or [np.zeros(0, np.int32)]))
+    ld_sig, cos_sig = tokenizer.sig_similarity(sa, sb)
+    ld_ref, cos_ref = tokenizer.similarity(sa.materialize(), sb.materialize())
+    assert ld_sig == pytest.approx(ld_ref, abs=1e-12)
+    assert cos_sig == pytest.approx(cos_ref, abs=1e-12)
+
+
+def test_stage_machine_accepts_signatures():
+    cfg = ChameleonConfig(m_warmup_stable=1, n_genpolicy_steps=1)
+    sm = StageMachine(cfg)
+    acc = tokenizer.SignatureAccumulator()
+    s = tokenizer.TokenStream(np.array([1, 2, 3] * 50, np.int32))
+    for i in range(6):
+        sm.observe(acc.update([s]), i)
+    assert sm.stage is Stage.STABLE
+    grown = tokenizer.TokenStream(
+        np.array([1, 2, 3] * 50 + [7, 8, 9] * 30, np.int32))
+    assert sm.observe(acc.update([grown]), 6) is Stage.WARMUP
+
+
+# ------------------------------------------------ satellite: scan-cap fix
+def test_virtual_length_sees_capped_scan_growth():
+    """80 -> 96 scanned layers materialize identically (both capped at
+    REPEAT_CAP copies) but the virtual length must still expose the 20%
+    growth to Lightweight length-diff detection."""
+    def make(n):
+        def f(x):
+            return jax.lax.scan(lambda c, _: (jnp.tanh(c @ c.T) @ c, None),
+                                x, None, length=n)[0]
+        return tokenizer.tokenize_jaxpr_stream(
+            jax.make_jaxpr(f)(jnp.ones((4, 4))))
+
+    s80, s96 = make(80), make(96)
+    np.testing.assert_array_equal(s80.tokens, s96.tokens)   # cap collides
+    assert s96.virtual_len > s80.virtual_len
+    assert s96.virtual_len / s80.virtual_len == pytest.approx(96 / 80,
+                                                              rel=0.05)
+    assert s80.content_hash != s96.content_hash
+    acc = tokenizer.SignatureAccumulator()
+    a = acc.update([s80])
+    b = acc.update([s96])
+    len_diff, _cos = tokenizer.sig_similarity(a, b)
+    assert len_diff >= 0.05        # Algo 1 must see the change
+
+    sm = StageMachine(ChameleonConfig(m_warmup_stable=1,
+                                      n_genpolicy_steps=1))
+    acc2 = tokenizer.SignatureAccumulator()
+    for i in range(6):
+        sm.observe(acc2.update([s80]), i)
+    assert sm.stage is Stage.STABLE
+    assert sm.observe(acc2.update([s96]), 6) is Stage.WARMUP
+
+
+def test_iteration_fingerprint_sees_capped_scan_growth():
+    """The policystore iteration fingerprint must carry the virtual
+    accounting too: 80 vs 96 deep-scan layers materialize identically
+    under REPEAT_CAP, but their fingerprints must neither share an exact
+    hash nor score reuse-grade (the length gate must see 80/96)."""
+    from repro.policystore import fingerprint_signature, similarity
+
+    def make(n):
+        def f(x):
+            return jax.lax.scan(lambda c, _: (jnp.tanh(c @ c.T) @ c, None),
+                                x, None, length=n)[0]
+        acc = tokenizer.SignatureAccumulator()
+        return acc.update([tokenizer.tokenize_jaxpr_stream(
+            jax.make_jaxpr(f)(jnp.ones((4, 4))))])
+
+    s80, s96 = make(80), make(96)
+    np.testing.assert_array_equal(s80.materialize(), s96.materialize())
+    fp80 = fingerprint_signature(s80, cache=False)
+    fp96 = fingerprint_signature(s96, cache=False)
+    assert fp80.exact != fp96.exact
+    assert fp80.length == len(s80) and fp96.length == len(s96)
+    assert similarity(fp80, fp96) < 1.0
+    from repro.policystore import length_ratio
+    cfg = PolicyStoreConfig()
+    assert length_ratio(fp80, fp96) < cfg.reuse_len_ratio  # no reuse tier
+
+    # an *uncapped* signature still exact-matches the plain token form,
+    # so iteration fingerprints keep hitting prepare fingerprints
+    small = tokenizer.Signature.from_tokens(
+        np.array([1, 2, 3, 4] * 10, np.int32))
+    assert (fingerprint_signature(small, cache=False).exact
+            == fingerprint_tokens(small.materialize(), cache=False).exact)
+
+
+def test_degenerate_token_ids_bounded():
+    """Huge token ids must not size the histogram by the largest id."""
+    a = np.array([1, 2, (1 << 31) - 5], np.int64)
+    b = np.array([1, 2, 3], np.int64)
+    ld, cos = tokenizer.similarity(a, b)
+    assert 0.0 <= ld <= 1.0 and 0.0 <= cos <= 1.0
+    hist = tokenizer.token_histogram(a)
+    assert hist.size <= tokenizer.MAX_DENSE_TOKEN + 1
+
+
+# ----------------------------------------------------- LSH: recall/parity
+@pytest.fixture
+def lsh_store():
+    rng = np.random.RandomState(42)
+    store = PolicyStore(PolicyStoreConfig(max_records=256))
+    streams = []
+    for i in range(120):
+        t = rng.randint(1, 50, size=300 + (i % 7) * 10).astype(np.int32)
+        streams.append(t)
+        store.put(_record(fingerprint_tokens(t, cache=False)))
+    return store, streams
+
+
+def test_lsh_nearest_recall_above_floor(lsh_store):
+    """Every perturbed recurrence of a stored stream must be found at a
+    similarity no worse than the exhaustive scan reports (recall 1.0 above
+    the floor); below the reuse floor the result is *identical*."""
+    store, streams = lsh_store
+    cfg = store.cfg
+    rng = np.random.RandomState(7)
+    found = total = 0
+    for i in range(0, 120, 5):
+        base = streams[i]
+        q = fingerprint_tokens(
+            np.concatenate([base, base[: rng.randint(0, 8)]]), cache=False)
+        rec, sim = store.nearest(q)
+        ex_rec, ex_sim = store.nearest_exhaustive(q)
+        if ex_sim >= cfg.warm_threshold:
+            total += 1
+            # either the same best, or some other reuse-grade record
+            if sim >= min(ex_sim, cfg.reuse_threshold) - 1e-12:
+                found += 1
+        if ex_sim < cfg.reuse_threshold:    # fallback ran: exact parity
+            assert sim == pytest.approx(ex_sim, abs=1e-12)
+    assert total > 0
+    assert found == total                  # recall 1.0 above the floor
+
+
+def test_lsh_nearest_miss_is_exhaustive_exact(lsh_store):
+    store, _streams = lsh_store
+    q = fingerprint_tokens(
+        np.arange(400, dtype=np.int32) % 9 + 200, cache=False)
+    rec, sim = store.nearest(q)
+    ex_rec, ex_sim = store.nearest_exhaustive(q)
+    assert sim == pytest.approx(ex_sim, abs=1e-12)
+    assert sim < store.cfg.warm_threshold
+
+
+def test_lsh_index_tracks_puts_and_evictions():
+    store = PolicyStore(PolicyStoreConfig(max_records=4))
+    fps = [fingerprint_tokens(np.arange(200, dtype=np.int32) % k + 1,
+                              cache=False) for k in (5, 7, 11, 13, 17, 19)]
+    for fp in fps:
+        store.put(_record(fp))
+    assert len(store.index) == 4           # evicted keys removed
+    assert store.index.keys() == set(r.key for r in store.records())
+
+
+def test_lsh_index_persistence_and_rebuild():
+    d = tempfile.mkdtemp()
+    try:
+        cfg = PolicyStoreConfig(dir=d)
+        store = PolicyStore(cfg)
+        fps = [fingerprint_tokens(np.arange(300, dtype=np.int32) % k + 1,
+                                  cache=False) for k in (5, 9, 13)]
+        for fp in fps:
+            store.put(_record(fp))
+        assert os.path.exists(os.path.join(d, "lsh.index"))
+
+        # clean reload: the persisted index is used as-is (no rebuild)
+        store2 = PolicyStore(cfg)
+        assert store2.n_index_rebuilds == 0
+        assert store2.index.keys() == set(r.key for r in store2.records())
+        q = fingerprint_tokens(
+            np.arange(300, dtype=np.int32) % 9 + 1, cache=False)
+        rec, sim = store2.nearest(q)
+        assert sim == 1.0                  # exact key via loaded index path
+
+        # corrupt index: rebuilt from records, lookups still correct
+        with open(os.path.join(d, "lsh.index"), "w") as f:
+            f.write("{broken")
+        store3 = PolicyStore(cfg)
+        assert store3.n_index_rebuilds == 1
+        rec, sim = store3.nearest(q)
+        assert sim == 1.0
+
+        # missing index: same story
+        os.remove(os.path.join(d, "lsh.index"))
+        store4 = PolicyStore(cfg)
+        assert store4.n_index_rebuilds == 1
+        assert os.path.exists(os.path.join(d, "lsh.index"))  # re-persisted
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_lsh_index_json_roundtrip():
+    idx = LSHIndex(64, 16)
+    rng = np.random.RandomState(0)
+    sigs = {f"k{i}": rng.randint(0, 1 << 30, size=64).astype(np.int64)
+            for i in range(10)}
+    for k, s in sigs.items():
+        idx.add(k, (s,))
+    idx2 = LSHIndex.from_json(json.loads(json.dumps(idx.to_json())))
+    for k, s in sigs.items():
+        assert k in idx2.query(s)
+
+
+# ------------------------------------------------- CI operation-count guards
+def test_guard_signature_work_proportional_to_changed_dispatches():
+    """The accumulator must do histogram work only for changed slots: an
+    unchanged iteration costs zero update tokens, a one-dispatch change
+    costs exactly that dispatch's (old + new) virtual length."""
+    rng = np.random.RandomState(0)
+    streams = [tokenizer.TokenStream(
+        rng.randint(1, 90, size=2000).astype(np.int32)) for _ in range(8)]
+    acc = tokenizer.SignatureAccumulator()
+    acc.update(streams)
+    base_tokens = acc.update_tokens
+    for _ in range(5):                      # steady state: zero array work
+        acc.update(streams)
+    assert acc.update_tokens == base_tokens
+    assert acc.changed_slots == len(streams)
+
+    changed = list(streams)
+    changed[3] = tokenizer.TokenStream(
+        rng.randint(1, 90, size=1500).astype(np.int32))
+    acc.update(changed)
+    assert acc.changed_slots == len(streams) + 1
+    assert (acc.update_tokens - base_tokens
+            == streams[3].virtual_len + changed[3].virtual_len)
+
+
+def test_guard_nearest_probe_count_at_1k_records():
+    """At 1k records a recurring-stream lookup must evaluate the full
+    calibrated similarity for a tiny fraction of the store (the LSH probe
+    shortlists; the bounded fallback never runs on a reuse-grade hit)."""
+    rng = np.random.RandomState(3)
+    store = PolicyStore(PolicyStoreConfig(max_records=1024))
+    base = None
+    for i in range(1000):
+        t = rng.randint(1, 40, size=350).astype(np.int32)
+        if i == 700:
+            base = t
+        store.put(_record(fingerprint_tokens(t, cache=False)))
+    assert len(store) == 1000
+    q = fingerprint_tokens(np.concatenate([base, base[:4]]), cache=False)
+    store.n_sim_evals = 0
+    rec, sim = store.nearest(q)
+    assert sim >= store.cfg.reuse_threshold
+    assert store.n_sim_evals <= 32, store.n_sim_evals   # ≪ 1000 records
+
+
+def test_guard_runtime_signature_stats_exposed():
+    """The runtime reports the accumulator counters so regression guards
+    (and operators) can see steady-state signature work."""
+    from repro.core.runtime import ChameleonRuntime
+    cfg = ChameleonConfig(enabled=False)
+    rt = ChameleonRuntime(cfg, step_builder=lambda policy: (lambda *a: None))
+    st_ = rt.stats()["signature"]
+    assert set(st_) == {"iterations", "changed_slots", "update_tokens"}
+
+
+# ------------------------------------------------- simulator search parity
+@given(st.integers(0, 500), st.integers(2, 12), st.integers(4, 16),
+       st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_simulator_backward_search_parity(seed, n_layers, groups, res_mb):
+    """The vectorized backward/forward budget searches must pick exactly
+    the layers the reference Python loops would."""
+    rng = np.random.RandomState(seed)
+    prof = synth_profile(n_layers=n_layers, ops_per_layer=10,
+                         res_bytes=res_mb << 20,
+                         t_iter=float(rng.uniform(0.01, 10.0)))
+    cfg = ChameleonConfig(groups_per_phase=groups)
+    sim = Simulator(prof, prof.n_ops // 2, cfg)
+    peak_layer = sim.layer_of(sim.peak_op)
+    for t in prof.tensors:
+        ts = sim.t_swap(t.nbytes)
+        first_use = sim.layer_of(t.death)
+        expect = None
+        for li in range(first_use - 1, peak_layer, -1):   # reference loop
+            if sim.layers[li].remaining_time > ts:
+                expect = li
+                break
+        from repro.core.candidates import Candidate
+        e = sim.place_swap_in(Candidate(t, 1, 1.0))
+        if expect is None:
+            assert e is None
+        else:
+            assert e is not None
+            assert e.swap_in_op == sim.layers[expect].start_op
+
+
+def test_simulator_forward_search_parity():
+    prof = synth_profile(t_iter=10.0)
+    cfg = ChameleonConfig(groups_per_phase=8)
+    from repro.core.candidates import build_candidate_list
+    from repro.core.memtrace import build_timeline
+    from repro.core.mrl import MRL
+    sim = Simulator(prof, prof.n_ops // 2, cfg)
+    tl = build_timeline(prof)
+    mrl = MRL.from_timeline(tl, int(tl.peak * 0.6))
+    cl = build_candidate_list(prof, mrl, cfg)
+    entries = sim.simulate(cl, mrl)
+    # replay the reference forward search on a fresh simulator
+    ref = Simulator(prof, prof.n_ops // 2, cfg)
+    for e in entries:                       # reapply swap-in budget spend
+        li = ref.layer_of(e.swap_in_op)
+        ref.layers[li].remaining_time = \
+            ref.layers[li].remaining_time - ref.t_swap(e.nbytes)
+    expected = {}
+    for e in sorted(entries, key=lambda e: e.birth):
+        ts = ref.t_swap(e.nbytes)
+        li = ref.layer_of(e.birth)
+        done = None
+        for lj in range(li, len(ref.layers)):
+            if ref.layers[lj].remaining_time > ts:
+                ref.layers[lj].remaining_time = \
+                    ref.layers[lj].remaining_time - ts
+                done = ref.layers[lj]
+                break
+        if done is None:
+            done = ref.layers[ref.layer_of(ref.peak_op)]
+        expected[e.uid] = done.end_op
+    sim.set_free_time(entries)
+    assert {e.uid: e.swap_out_done_op for e in entries} == expected
