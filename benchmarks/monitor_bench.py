@@ -130,4 +130,31 @@ def run(iters: int = 5):
     per_probe = (store.n_sim_evals - evals0) // max(iters + 2, 1)
     add("nearest@1k", t_old, t_new,
         f"records=1000 sim_evals/probe<={max(per_probe, 1)}")
+
+    # ---- obs tracing overhead (ISSUE 6): the always-on span tracer must
+    # honor the same leave-it-on bar as the signature path.  Two rows:
+    # the raw per-record cost, and the signature workload untraced vs
+    # wrapped in a span (the shape every wired subsystem uses).
+    from repro import obs
+
+    tr = obs.SpanTracer()
+
+    def record_block():
+        for _ in range(100):
+            tr.record(obs.LANE_COMPUTE, "bench", 0.0, 1.0, arg=("tag", 1))
+
+    t_rec = time_call(record_block, iters=iters) / 100
+    rows.append(("monitor.obs.record_span", t_rec,
+                 f"capacity={tr.capacity}"))
+
+    def sig_traced():
+        with tr.span(obs.LANE_COMPUTE, "signature"):
+            sm_new.observe(acc.update(streams))
+
+    t_plain = time_call(sig_new, iters=max(iters, 5))
+    t_traced = time_call(sig_traced, iters=max(iters, 5))
+    added = max(t_traced - t_plain, 0.0)
+    rows.append(("monitor.obs.signature_traced", t_traced,
+                 f"added<={added * 1e6:.1f}us vs untraced "
+                 f"{t_plain * 1e6:.1f}us"))
     return rows

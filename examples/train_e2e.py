@@ -42,17 +42,34 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--budget-gib", type=float, default=16.0,
+                    help="HBM budget; small values force swap policies "
+                         "(and thus policy_swap-lane trace traffic)")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON on exit")
+    ap.add_argument("--metrics-out", default="",
+                    help="append repro.obs metrics snapshots (JSONL)")
+    ap.add_argument("--with-serve", action="store_true",
+                    help="after training, run a short over-subscribed "
+                         "serving burst in-process so the trace also "
+                         "carries kv_spill-lane spans")
     args = ap.parse_args()
 
     cfg = PRESETS[args.preset]
     print(f"model {cfg.name}: {cfg.param_count():,} params")
-    tcfg = TrainConfig(steps=args.steps, checkpoint_every=50,
+    tcfg = TrainConfig(steps=args.steps, checkpoint_every=args.checkpoint_every,
                        checkpoint_dir=f"/tmp/train_e2e_{args.preset}",
                        eval_every=args.eval_every, warmup_steps=20,
                        learning_rate=3e-4)
+    cham = ChameleonConfig(enabled=True,
+                           hbm_budget_bytes=int(args.budget_gib * 2 ** 30))
     data = SyntheticTokens(cfg.vocab_size, args.seq, args.batch).start()
+    tr = None
     try:
-        tr = Trainer(cfg, tcfg, ChameleonConfig(enabled=True), data=data)
+        tr = Trainer(cfg, tcfg, cham, data=data,
+                     metrics_out=args.metrics_out or None,
+                     metrics_every=max(args.steps // 4, 1))
         if args.resume and tr.resume():
             print(f"resumed at step {tr.step}")
         t0 = time.time()
@@ -64,8 +81,49 @@ def main():
         print(f"evals: {rep.eval_losses}")
         print(f"straggler events: {len(tr.straggler.events)}")
         print(f"chameleon: {tr.rt.stats()}")
+        if args.with_serve:
+            serve_burst(cfg, tr)
     finally:
         data.stop()
+        if tr is not None:
+            export_obs(args, tr.rt)
+
+
+def serve_burst(cfg, tr):
+    """Over-subscribed serving burst on the freshly trained weights: more
+    admitted requests than HBM-resident slots, so preempted decode state
+    spills through the host pool and the trace picks up kv_spill-lane
+    spans in the same file as the training lanes."""
+    import numpy as np  # noqa: E402
+
+    from repro.runtime.server import Server  # noqa: E402
+
+    srv = Server(cfg, tr.params, max_batch=2, max_len=64, max_active=4)
+    rng = np.random.RandomState(0)
+    for _ in range(4):
+        srv.submit(rng.randint(0, cfg.vocab_size, size=8), max_new_tokens=6)
+    results = srv.run_until_done(max_ticks=200)
+    print(f"serve burst: {len(results)} requests, "
+          f"{srv.n_preemptions} preemptions, "
+          f"{srv.hostmem.kvspill.n_spills} spills")
+
+
+def export_obs(args, rt):
+    from repro import obs  # noqa: E402
+
+    if args.metrics_out:
+        obs.metrics().write_jsonl(args.metrics_out)
+        print(f"metrics: {args.metrics_out}")
+    if args.trace_out:
+        counters = {"overlap_efficiency": [
+            (h["t"], h["efficiency"]) for h in rt.overlap_history
+            if h["efficiency"] is not None]}
+        obs.export_chrome_trace(args.trace_out, obs.tracer(),
+                                counters=counters,
+                                meta={"preset": args.preset,
+                                      "steps": args.steps})
+        print(f"trace: {args.trace_out} "
+              f"({obs.tracer().stats()['retained']} events)")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,8 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro import obs
+
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
@@ -97,8 +99,10 @@ class CheckpointManager:
              extra: Optional[dict] = None, block: bool = False) -> str:
         """Snapshot now, write async (unless block=True)."""
         self.wait()
-        snap = {name: _flatten(tree) for name, tree in trees.items()
-                if tree is not None}
+        with obs.tracer().span(obs.LANE_CHECKPOINT, "ckpt.snapshot",
+                               arg=step):
+            snap = {name: _flatten(tree) for name, tree in trees.items()
+                    if tree is not None}
         if self.engine is not None:
             from repro.hostmem.engine import TC_CHECKPOINT
             # widen the class window to the whole drain so no copy is
@@ -106,39 +110,19 @@ class CheckpointManager:
             self.engine.set_class_depth(
                 TC_CHECKPOINT,
                 sum(len(flat) for flat in snap.values()) + 2)
-            snap = {name: self._stage(name, flat)
-                    for name, flat in snap.items()}
+            with obs.tracer().span(obs.LANE_CHECKPOINT, "ckpt.stage",
+                                   arg=step):
+                snap = {name: self._stage(name, flat)
+                        for name, flat in snap.items()}
         extra = dict(extra or {})
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + f".tmp.{self.proc}"
 
         def write():
             try:
-                os.makedirs(tmp, exist_ok=True)
-                manifest = {"step": step, "time": time.time(),
-                            "process_count": jax.process_count(),
-                            "extra": extra, "trees": {}}
-                for name, flat in snap.items():
-                    if self.engine is not None:
-                        flat = self._collect(flat)
-                    fname = f"{name}.p{self.proc}.npz"
-                    path = os.path.join(tmp, fname)
-                    np.savez(path, **flat)
-                    with open(path, "rb") as f:
-                        digest = hashlib.sha256(f.read()).hexdigest()
-                    manifest["trees"][name] = {
-                        "file": fname, "sha256": digest,
-                        "keys": sorted(flat.keys())}
-                mpath = os.path.join(tmp, f"manifest.p{self.proc}.json")
-                with open(mpath, "w") as f:
-                    json.dump(manifest, f, indent=1)
-                    f.flush()
-                    os.fsync(f.fileno())
-                if not os.path.exists(final):
-                    os.replace(tmp, final)
-                else:
-                    shutil.rmtree(tmp, ignore_errors=True)
-                self._gc()
+                with obs.tracer().span(obs.LANE_CHECKPOINT, "ckpt.write",
+                                       arg=step):
+                    self._write_body(step, snap, extra, tmp, final)
             except BaseException as e:   # surfaced on next wait()
                 self._error = e
                 if self.engine is not None:   # recycle any staged slabs
@@ -160,6 +144,35 @@ class CheckpointManager:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
         return final
+
+    def _write_body(self, step, snap, extra, tmp, final):
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "time": time.time(),
+                    "process_count": jax.process_count(),
+                    "extra": extra, "trees": {}}
+        for name, flat in snap.items():
+            if self.engine is not None:
+                with obs.tracer().span(obs.LANE_CHECKPOINT, "ckpt.collect",
+                                       arg=name):
+                    flat = self._collect(flat)
+            fname = f"{name}.p{self.proc}.npz"
+            path = os.path.join(tmp, fname)
+            np.savez(path, **flat)
+            with open(path, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            manifest["trees"][name] = {
+                "file": fname, "sha256": digest,
+                "keys": sorted(flat.keys())}
+        mpath = os.path.join(tmp, f"manifest.p{self.proc}.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        if not os.path.exists(final):
+            os.replace(tmp, final)
+        else:
+            shutil.rmtree(tmp, ignore_errors=True)
+        self._gc()
 
     def wait(self):
         if self._thread is not None:

@@ -19,6 +19,7 @@ and selects the one with the best runtime performance".
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from dataclasses import dataclass, field
@@ -26,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.common.config import ChameleonConfig
 from repro.core import tokenizer
 from repro.core.executor import AppliedPolicy, Executor
@@ -100,6 +102,12 @@ class ChameleonRuntime:
         self._last_decision = None           # DriftDecision of this adaptation
         self._adapt_mark: Optional[Tuple[int, float]] = None
         self.adaptations: List[dict] = []
+        # per-iteration swap/compute overlap (repro.obs): fraction of
+        # engine transfer time hidden under compute spans this iteration
+        self._iter_t0 = time.perf_counter()
+        self.overlap_history: collections.deque = collections.deque(
+            maxlen=512)
+        obs.tracer().set_iteration(self.step_idx)
 
     # ------------------------------------------------------------ helpers
     def _args_key(self, args) -> Tuple:
@@ -138,24 +146,37 @@ class ChameleonRuntime:
             return self.applied
         if self._adapt_mark is None:
             self._adapt_mark = (self.step_idx, time.perf_counter())
-        cj = self._baseline_jaxpr(example_args)
-        prof = profile_jaxpr(cj, t_iter=1.0)   # timing unknown pre-run; the
-        self.baseline_profile = prof           # warm-up fit is memory-only
-        tl = build_timeline(prof)
-        if self.store is not None and self._try_policystore(prof, tl):
-            return self.applied                # reuse tier: cached policy
-        if tl.peak > self.budget:
-            try:
-                sites = warmup_offload_sites(prof, self.cfg, self.budget)
-                self.applied = AppliedPolicy(None, sites,
-                                             self.executor.site_universe(prof)
-                                             - sites, set(),
-                                             "warmup:" + ",".join(sorted(sites)))
-            except ChameleonOOMError:
-                self.applied = self.executor.conservative(prof)
-        else:
-            self.applied = self.executor.baseline()
+        with obs.tracer().span(obs.LANE_ADAPT, "prepare", arg=self.step_idx):
+            cj = self._baseline_jaxpr(example_args)
+            prof = profile_jaxpr(cj, t_iter=1.0)   # timing unknown pre-run;
+            self.baseline_profile = prof           # warm-up fit: memory-only
+            tl = build_timeline(prof)
+            if self.store is not None and self._try_policystore(prof, tl):
+                return self.applied            # reuse tier: cached policy
+            if tl.peak > self.budget:
+                try:
+                    sites = warmup_offload_sites(prof, self.cfg, self.budget)
+                    self.applied = AppliedPolicy(
+                        None, sites,
+                        self.executor.site_universe(prof) - sites, set(),
+                        "warmup:" + ",".join(sorted(sites)))
+                    kind = "warmup"
+                except ChameleonOOMError:
+                    self.applied = self.executor.conservative(prof)
+                    kind = "conservative"
+            else:
+                self.applied = self.executor.baseline()
+                kind = "baseline"
+            self._audit_apply(kind)
         return self.applied
+
+    def _audit_apply(self, kind: str, knob: Optional[float] = None) -> None:
+        """Audit-log the policy taking effect (repro.obs drift trail)."""
+        obs.audit().event(
+            "policy.apply", policy_kind=kind, step=self.step_idx,
+            policy=self.applied.fingerprint[:48], knob=knob,
+            n_offload=len(self.applied.offload),
+            release_plan=len(self.applied.release_plan))
 
     # ------------------------------------------- policystore (repro.policystore)
     def _fingerprint(self, prof: ProfileData):
@@ -187,6 +208,7 @@ class ChameleonRuntime:
                 self.machine.force_stable(self.step_idx, "policystore-reuse")
                 self.machine.n_genpolicy = None
                 self._gen_knobs = VARIANT_KNOBS
+                self._audit_apply("reuse", knob=rec.knob if rec else None)
                 self._finish_adaptation("reuse")
                 return True
             decision = self.drift.demote(decision, "match-miss")
@@ -265,13 +287,19 @@ class ChameleonRuntime:
         kind = ("swap" if self.best.swap is not None
                 else "conservative" if self.best.applied.offload
                 else "baseline")
-        self.store.put(PolicyRecord.from_policy(
+        rec = PolicyRecord.from_policy(
             fingerprint=iter_fp, prepare_fingerprint=prep_fp,
             swap=self.best.swap, candidates=prof.candidates,
             n_ops=prof.n_ops, knob=self.best.knob,
             measured_t=self.best.measured_t or 0.0, budget=self.budget,
             bwmodel=self.hostmem.bwmodel if self.hostmem else None,
-            policy_kind=kind))
+            policy_kind=kind)
+        self.store.put(rec)
+        obs.audit().event(
+            "policy.store_put", key=rec.key[:12], policy_kind=kind,
+            knob=self.best.knob,
+            measured_t=round(self.best.measured_t or 0.0, 6),
+            step=self.step_idx)
 
     def _finish_adaptation(self, tier: str) -> None:
         """Close the adaptation-latency window opened by ``prepare``."""
@@ -279,14 +307,21 @@ class ChameleonRuntime:
             return
         start_step, t0 = self._adapt_mark
         self._adapt_mark = None
-        self.adaptations.append({
+        rec = {
             "trigger_step": start_step,
             "end_step": self.step_idx,
             "steps": self.step_idx - start_step,
             "seconds": time.perf_counter() - t0,
             "tier": tier,
             "genpolicy_steps": len(self.variants),
-        })
+        }
+        self.adaptations.append(rec)
+        obs.audit().event("adaptation.done", tier=tier,
+                          trigger_step=start_step, end_step=self.step_idx,
+                          seconds=round(rec["seconds"], 6),
+                          genpolicy_steps=rec["genpolicy_steps"])
+        obs.metrics().counter("adaptations")
+        obs.metrics().gauge("adaptation_seconds", rec["seconds"])
 
     # ------------------------------------------------------ per-iteration
     def step_fn(self) -> Callable:
@@ -377,8 +412,26 @@ class ChameleonRuntime:
         self.history.append({"step": self.step_idx, "stage": stage.value,
                              "policy": self.applied.fingerprint,
                              "t_iter": t_iter})
+        self._close_obs_window()
         self.profiling_overhead_s += (time.perf_counter() - t0) - adapt_dt
         return stage
+
+    def _close_obs_window(self) -> None:
+        """Per-iteration overlap efficiency: how much of this window's
+        engine transfer time was hidden under compute spans (after the
+        mirror swaps above, so the applied policy's traffic counts)."""
+        t1 = time.perf_counter()
+        eff, transfer_s, hidden_s = obs.window_efficiency(
+            obs.tracer(), self._iter_t0, t1)
+        if transfer_s > 0.0:
+            self.overlap_history.append({
+                "step": self.step_idx, "t": t1,
+                "efficiency": eff, "transfer_s": transfer_s,
+                "hidden_s": hidden_s})
+            obs.metrics().gauge("overlap_efficiency", eff, t=t1)
+        obs.metrics().counter("iterations")
+        self._iter_t0 = t1
+        obs.tracer().set_iteration(self.step_idx)
 
     # --------------------------------------- §5.4.2 applied-swap traffic
     def _mirror_policy_swaps(self, applied: AppliedPolicy) -> None:
@@ -424,6 +477,12 @@ class ChameleonRuntime:
         args = getattr(self, "_last_train_args", self._example_args)
         if args is None:
             return
+        knob_next = self._gen_knobs[len(self.variants) % len(self._gen_knobs)]
+        with obs.tracer().span(obs.LANE_ADAPT, "genpolicy_step",
+                               arg=knob_next):
+            self._genpolicy_step_body(args, t_iter)
+
+    def _genpolicy_step_body(self, args, t_iter: float) -> None:
         cj = self._baseline_jaxpr(args)
         prof = profile_jaxpr(cj, t_iter=t_iter)   # Detailed mode
         self.profile = prof
@@ -454,17 +513,20 @@ class ChameleonRuntime:
         self.applied = applied                     # next iteration runs it
 
     def _select_best(self) -> None:
-        timed = [v for v in self.variants if v.measured_t is not None]
-        if timed:
-            self._select_best_timed(timed)
-        tier = (self._last_decision.tier.value
-                if self._last_decision is not None else Tier.REGEN.value)
-        self._finish_adaptation(tier)
-        self._last_decision = None
-        self._gen_knobs = VARIANT_KNOBS        # next adaptation starts cold
-        self.machine.n_genpolicy = None
-        if timed:
-            self._store_result()
+        with obs.tracer().span(obs.LANE_ADAPT, "select_best",
+                               arg=len(self.variants)):
+            timed = [v for v in self.variants if v.measured_t is not None]
+            if timed:
+                self._select_best_timed(timed)
+                self._audit_apply("genpolicy", knob=self.best.knob)
+            tier = (self._last_decision.tier.value
+                    if self._last_decision is not None else Tier.REGEN.value)
+            self._finish_adaptation(tier)
+            self._last_decision = None
+            self._gen_knobs = VARIANT_KNOBS    # next adaptation starts cold
+            self.machine.n_genpolicy = None
+            if timed:
+                self._store_result()
 
     def _select_best_timed(self, timed: List[PolicyVariant]) -> None:
         self.best = min(timed, key=lambda v: v.measured_t)
@@ -500,6 +562,29 @@ class ChameleonRuntime:
             "signature": self._sig_acc.stats(),
             "hostmem": self.hostmem.stats() if self.hostmem else None,
             "policystore": self.policystore_stats(),
+            "obs": self.obs_stats(),
+        }
+
+    def obs_stats(self) -> dict:
+        """Tracing/overlap summary (repro.obs).  ``overlap`` aggregates the
+        per-iteration swap/compute overlap-efficiency history; iterations
+        with no engine traffic are excluded (``measured`` counts the ones
+        that had transfers, ``iterations`` every closed window)."""
+        effs = [h["efficiency"] for h in self.overlap_history
+                if h["efficiency"] is not None]
+        return {
+            "overlap": {
+                "last": effs[-1] if effs else None,
+                "mean": float(np.mean(effs)) if effs else None,
+                "measured": len(effs),
+                "iterations": self.step_idx,
+                "transfer_s": float(sum(h["transfer_s"]
+                                        for h in self.overlap_history)),
+                "hidden_s": float(sum(h["hidden_s"]
+                                      for h in self.overlap_history)),
+            },
+            "tracer": obs.tracer().stats(),
+            "audit": obs.audit().counts(),
         }
 
     def policystore_stats(self) -> Optional[dict]:

@@ -14,6 +14,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.common.config import ChameleonConfig
 from repro.core.tokenizer import Signature, sig_similarity
 
@@ -95,3 +96,9 @@ class StageMachine:
 
     def _log(self, step, why, to):
         self.transitions.append((step, why, to.value))
+        # audit + trace: every stage move is an inspectable event and a
+        # marker on the adapt lane (name set is bounded: one per stage)
+        obs.audit().event("stage.transition", step=step, why=why,
+                          to=to.value)
+        obs.tracer().instant(obs.LANE_ADAPT, f"stage:{to.value}",
+                             arg=(step, why))

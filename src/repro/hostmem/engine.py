@@ -53,6 +53,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.hostmem.pool import HostBlock, HostMemError, PinnedSlabPool
 
 SWAP_OUT = "out"                 # device -> host
@@ -81,6 +82,7 @@ class TransferEvent:
     block: Optional[HostBlock] = None   # staging slab (owned until swap-in)
     result: Any = None           # device array (swap-in only)
     release_op: int = -1         # policy-planned release point (§5.4.2)
+    t_submit: float = 0.0        # perf_counter at submission (queue wait)
     _source: Any = field(default=None, repr=False)   # device ref held to done
     _callbacks: List[Callable] = field(default_factory=list, repr=False)
 
@@ -170,7 +172,7 @@ class TransferEngine:
         with self._lock:
             self._eid += 1
             ev = TransferEvent(self._eid, SWAP_OUT, tag, nbytes, cls=cls,
-                               _source=array)
+                               t_submit=time.perf_counter(), _source=array)
             ev.release_op = self._planned_release.get(tag, -1)
             self._enqueue(ev)
         return ev
@@ -200,7 +202,8 @@ class TransferEngine:
                     "slab was already consumed (freed or swapped in)")
             self._eid += 1
             ev = TransferEvent(self._eid, SWAP_IN, tag or blk.tag, blk.nbytes,
-                               cls=cls, block=blk)
+                               cls=cls, block=blk,
+                               t_submit=time.perf_counter())
             ev._free_block = free_block
             self._enqueue(ev)
         return ev
@@ -254,8 +257,16 @@ class TransferEngine:
             ev.result = self._device_put(host)
             if getattr(ev, "_free_block", True):
                 self.pool.free(ev.block)
-        ev.seconds = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        ev.seconds = t1 - t0
         ev.done = True
+        # trace lane == traffic class: one Chrome-trace row per stream.
+        # submit→start is the queue wait; start→done is the copy itself.
+        obs.tracer().record(
+            ev.cls, "swap_out" if ev.kind == SWAP_OUT else "swap_in",
+            t0, t1,
+            arg=(ev.tag, ev.nbytes,
+                 round(max(t0 - ev.t_submit, 0.0), 6) if ev.t_submit else 0.0))
         cc = self.by_class[ev.cls]
         if ev.kind == SWAP_OUT:
             self.n_out += 1
@@ -358,8 +369,11 @@ class TransferEngine:
             for c in TRAFFIC_CLASSES:
                 q = self._pending[(c, SWAP_OUT)]
                 while q and 0 <= q[0].release_op <= self.current_op:
-                    self._execute(q.popleft())
+                    ev = q.popleft()
+                    self._execute(ev)
                     self.by_class[c].released_at_op += 1
+                    obs.tracer().instant(c, "release@op",
+                                         arg=(ev.release_op, ev.tag))
                     n += 1
         return n
 
@@ -390,10 +404,32 @@ class TransferEngine:
                     hol = max(hol, self._est_seconds(q[0].nbytes))
         return ahead + hol
 
+    def queued_bytes(self, cls: str) -> int:
+        """Bytes sitting in ``cls``'s queues right now — the backlog the
+        simulator prices via :meth:`queued_delay`, exposed as a gauge."""
+        self._check_class(cls)
+        with self._lock:
+            return sum(e.nbytes for k in (SWAP_OUT, SWAP_IN)
+                       for e in self._pending[(cls, k)])
+
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
         tput = lambda b, s: b / s / 1e9 if s > 0 else 0.0   # noqa: E731
         with self._lock:
+            classes = {}
+            total_queued = 0
+            for c, cc in self.by_class.items():
+                d = cc.as_dict()
+                # live backlog gauges: depth (transfers) and bytes queued —
+                # queued_delay prices this backlog into the simulator, the
+                # gauges make it visible to stats consumers too
+                d["queue_depth"] = sum(
+                    len(self._pending[(c, k)]) for k in (SWAP_OUT, SWAP_IN))
+                d["queued_bytes"] = sum(
+                    e.nbytes for k in (SWAP_OUT, SWAP_IN)
+                    for e in self._pending[(c, k)])
+                total_queued += d["queued_bytes"]
+                classes[c] = d
             return {
                 "n_out": self.n_out, "n_in": self.n_in,
                 "bytes_out": self.bytes_out, "bytes_in": self.bytes_in,
@@ -401,9 +437,9 @@ class TransferEngine:
                 "gbps_out": tput(self.bytes_out, self.time_out_s),
                 "gbps_in": tput(self.bytes_in, self.time_in_s),
                 "in_flight": self.in_flight,
+                "queued_bytes": total_queued,
                 "forced_retires": self.forced_retires,
                 "planned_releases": len(self._planned_release),
                 "current_op": self.current_op,
-                "classes": {c: cc.as_dict()
-                            for c, cc in self.by_class.items()},
+                "classes": classes,
             }

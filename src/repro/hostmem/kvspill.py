@@ -35,6 +35,7 @@ from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.hostmem.engine import TC_KV_SPILL, TransferEngine, TransferEvent
 from repro.hostmem.pool import HostMemError, PinnedSlabPool
 
@@ -108,6 +109,11 @@ class KVSpillManager:
     def spill(self, state, slot: int, tag: str = "") -> SpilledSlot:
         """Gather batch row ``slot`` of every state field into one packed
         buffer and queue a single kv_spill-class D2H copy."""
+        with obs.tracer().span(obs.LANE_KV_SPILL, "kv.pack",
+                               arg=(tag or "kvslot", slot)):
+            return self._spill(state, slot, tag)
+
+    def _spill(self, state, slot: int, tag: str = "") -> SpilledSlot:
         sp = SpilledSlot(tag, pos=int(state.pos[slot]))
         chunks: List[np.ndarray] = []
         off = 0
@@ -144,6 +150,11 @@ class KVSpillManager:
         """Swap a spilled slot image back into HBM row ``slot``.  Consumes
         the image: the staged event is cleared so a later ``discard`` is a
         no-op rather than a double free."""
+        with obs.tracer().span(obs.LANE_KV_SPILL, "kv.restore",
+                               arg=(sp.tag, slot, sp.nbytes)):
+            return self._restore(state, sp, slot)
+
+    def _restore(self, state, sp: SpilledSlot, slot: int):
         import jax.numpy as jnp
         if sp.nbytes and sp.event is None:
             raise HostMemError(

@@ -26,31 +26,48 @@ def collect(tier) -> dict:
 
 
 def format_summary(stats: dict) -> str:
-    p, e = stats["pool"], stats["engine"]
+    """Human-readable tier summary.  Tolerant of partial snapshots: a
+    cold-start tier (engine with no classes populated yet, bwmodel with
+    zero points, missing kvspill) must format, not crash — the summary is
+    printed from CLI ``finally`` blocks where a raise would mask the real
+    error."""
+    p = stats.get("pool") or {}
+    e = stats.get("engine") or {}
     lines = [
-        f"pool: {p['bytes_in_use'] / 2**20:.1f} MiB live / "
-        f"{p['bytes_reserved'] / 2**20:.1f} MiB reserved, "
-        f"hit-rate {p['hit_rate']:.1%}, frag {p['fragmentation']:.1%}",
-        f"engine: {e['n_out']} out ({e['bytes_out'] / 2**20:.1f} MiB, "
-        f"{e['gbps_out']:.2f} GB/s), {e['n_in']} in "
-        f"({e['bytes_in'] / 2**20:.1f} MiB, {e['gbps_in']:.2f} GB/s)",
+        f"pool: {p.get('bytes_in_use', 0) / 2**20:.1f} MiB live / "
+        f"{p.get('bytes_reserved', 0) / 2**20:.1f} MiB reserved, "
+        f"hit-rate {p.get('hit_rate', 0.0):.1%}, "
+        f"frag {p.get('fragmentation', 0.0):.1%}",
+        f"engine: {e.get('n_out', 0)} out "
+        f"({e.get('bytes_out', 0) / 2**20:.1f} MiB, "
+        f"{e.get('gbps_out', 0.0):.2f} GB/s), {e.get('n_in', 0)} in "
+        f"({e.get('bytes_in', 0) / 2**20:.1f} MiB, "
+        f"{e.get('gbps_in', 0.0):.2f} GB/s)",
     ]
-    for cls, c in e.get("classes", {}).items():
-        if not (c["n_out"] or c["n_in"]):
+    for cls, c in (e.get("classes") or {}).items():
+        queued = c.get("queued_bytes", 0)
+        if not (c.get("n_out") or c.get("n_in") or queued):
             continue
-        lines.append(
-            f"  {cls}: {c['n_out']} out / {c['n_in']} in, "
-            f"{(c['bytes_out'] + c['bytes_in']) / 2**20:.1f} MiB, "
-            f"stall {c['stall_s'] * 1e3:.1f} ms "
-            f"({c['stall_transfers']} waits), "
-            f"released@op {c['released_at_op']}")
-    bw = stats["bwmodel"]
-    lines.append("bwmodel: " + ("calibrated, %d points" % bw["points"]
-                                if bw["calibrated"] else
-                                "constant %.1f GB/s" % bw["constant_gbps"]))
+        line = (
+            f"  {cls}: {c.get('n_out', 0)} out / {c.get('n_in', 0)} in, "
+            f"{(c.get('bytes_out', 0) + c.get('bytes_in', 0)) / 2**20:.1f}"
+            f" MiB, stall {c.get('stall_s', 0.0) * 1e3:.1f} ms "
+            f"({c.get('stall_transfers', 0)} waits), "
+            f"released@op {c.get('released_at_op', 0)}")
+        if queued:
+            line += (f", queued {c.get('queue_depth', 0)} "
+                     f"({queued / 2**20:.1f} MiB)")
+        lines.append(line)
+    bw = stats.get("bwmodel") or {}
+    points = bw.get("points", 0)
+    if bw.get("calibrated") and points:
+        lines.append("bwmodel: calibrated, %d points" % points)
+    else:
+        lines.append("bwmodel: constant %.1f GB/s"
+                     % bw.get("constant_gbps", 0.0))
     if "kvspill" in stats:
         k = stats["kvspill"]
-        lines.append(f"kvspill: {k['n_spills']} spills / "
-                     f"{k['n_restores']} restores, "
-                     f"{k['bytes_spilled'] / 2**20:.1f} MiB out")
+        lines.append(f"kvspill: {k.get('n_spills', 0)} spills / "
+                     f"{k.get('n_restores', 0)} restores, "
+                     f"{k.get('bytes_spilled', 0) / 2**20:.1f} MiB out")
     return "\n".join(lines)

@@ -33,6 +33,12 @@ def main():
     ap.add_argument("--policy-store-dir", default="",
                     help="attach the shared adaptation cache (read-only "
                          "visibility: cache warmth is reported in stats)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON here on exit "
+                         "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write one repro.obs metrics-registry snapshot "
+                         "(JSONL) here on exit")
     args = ap.parse_args()
 
     import jax
@@ -96,6 +102,15 @@ def main():
                   f"({ks['compression_ratio']:.2f}x)")
     if policystore is not None:
         print(f"policystore: {policystore.stats()}")
+    from repro import obs
+    if args.metrics_out:
+        obs.metrics().write_jsonl(args.metrics_out)
+    if args.trace_out:
+        obs.export_chrome_trace(args.trace_out, obs.tracer(),
+                                meta={"arch": args.arch,
+                                      "requests": args.requests})
+        print(f"trace: {args.trace_out} "
+              f"({obs.tracer().stats()['retained']} events)")
 
 
 if __name__ == "__main__":

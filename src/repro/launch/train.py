@@ -38,6 +38,17 @@ def main():
     ap.add_argument("--mesh", choices=["none", "single", "multi"],
                     default="none")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON here on exit "
+                         "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default="",
+                    help="append repro.obs metrics-registry snapshots "
+                         "(JSONL) here during training")
+    ap.add_argument("--metrics-every", type=int, default=25,
+                    help="snapshot cadence for --metrics-out (steps)")
+    ap.add_argument("--stats-json", default="",
+                    help="dump the full runtime stats() dict + obs "
+                         "snapshot as JSON here on exit")
     args = ap.parse_args()
 
     if args.multihost:
@@ -69,14 +80,24 @@ def main():
     data = SyntheticTokens(cfg.vocab_size, seq, gb,
                            host_index=jax.process_index(),
                            host_count=jax.process_count()).start()
+    tr = None
     try:
-        tr = Trainer(cfg, tcfg, cham, mesh=mesh, data=data)
+        tr = Trainer(cfg, tcfg, cham, mesh=mesh, data=data,
+                     metrics_out=args.metrics_out or None,
+                     metrics_every=args.metrics_every)
         if args.resume:
             tr.resume()
         rep = tr.train(args.steps)
         print(f"done: loss {rep.losses[0]:.3f} -> {rep.losses[-1]:.3f}; "
               f"stages={set(rep.stages)}; "
               f"chameleon={tr.rt.stats()['applied'][:60]}")
+        ov = tr.rt.obs_stats()["overlap"]
+        if ov["measured"]:
+            print(f"overlap efficiency: last {ov['last']:.1%} / "
+                  f"mean {ov['mean']:.1%} over {ov['measured']} "
+                  f"transfer-active iterations "
+                  f"({ov['hidden_s'] * 1e3:.1f} of "
+                  f"{ov['transfer_s'] * 1e3:.1f} ms hidden)")
         ps = rep.policystore
         if ps is not None:
             t, s = ps["tiers"], ps["store"]
@@ -88,6 +109,35 @@ def main():
                   f"adaptations={len(ps['adaptations'])}")
     finally:
         data.stop()
+        if tr is not None:
+            _export_obs(args, tr.rt)
+
+
+def _export_obs(args, rt) -> None:
+    """Flush the repro.obs artifacts the flags asked for.  Runs from the
+    ``finally`` block so a crashed run still leaves its trace behind."""
+    import json
+
+    from repro import obs
+
+    if getattr(args, "metrics_out", ""):
+        obs.metrics().write_jsonl(args.metrics_out)
+    if getattr(args, "trace_out", ""):
+        counters = {"overlap_efficiency": [
+            (h["t"], h["efficiency"]) for h in rt.overlap_history
+            if h["efficiency"] is not None]}
+        obs.export_chrome_trace(args.trace_out, obs.tracer(),
+                                counters=counters,
+                                meta={"arch": args.arch,
+                                      "steps": args.steps})
+        print(f"trace: {args.trace_out} "
+              f"({obs.tracer().stats()['retained']} events)")
+    if getattr(args, "stats_json", ""):
+        snap = {"runtime": rt.stats(), "obs_snapshot": obs.metrics().snapshot(),
+                "audit_tail": obs.audit().tail(200)}
+        with open(args.stats_json, "w") as f:
+            json.dump(snap, f, indent=1, default=repr)
+        print(f"stats: {args.stats_json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,82 @@
+"""repro.obs — always-on tracing, unified metrics, and the drift audit log.
+
+Three pillars (ISSUE 6), all bounded-memory so they stay enabled in
+production, matching the monitoring hot path's "cheap enough to leave
+on" bar:
+
+  * :class:`SpanTracer` — ring-buffered span recorder over five fixed
+    lanes (``compute``, ``policy_swap``, ``kv_spill``, ``checkpoint``,
+    ``adapt``), exported as Chrome trace-event JSON
+    (:func:`export_chrome_trace`) and reduced to a per-iteration
+    **overlap-efficiency** metric (:mod:`repro.obs.overlap`);
+  * :class:`MetricsRegistry` — one counter/gauge/provider registry the
+    scattered ``stats()`` dicts register into, with a JSONL snapshot
+    writer;
+  * :class:`AuditLog` — structured drift-decision events (classify /
+    demote / apply / store-put / stage transitions).
+
+Process-wide defaults are exposed through :func:`tracer`,
+:func:`metrics`, and :func:`audit` — subsystems record into them without
+plumbing an object through every constructor, exactly like a logging
+root logger.  Tests that need isolation swap them with
+:func:`set_tracer` / :func:`set_audit` / :func:`set_metrics` (each
+returns the previous instance) or simply ``clear()`` the defaults.
+"""
+from __future__ import annotations
+
+from repro.obs.audit import AuditLog
+from repro.obs.metrics import MetricsRegistry, SNAPSHOT_KEYS
+from repro.obs.overlap import (interval_union, overlap_efficiency,
+                               window_efficiency)
+from repro.obs.tracer import (LANE_ADAPT, LANE_CHECKPOINT, LANE_COMPUTE,
+                              LANE_ID, LANE_KV_SPILL, LANE_POLICY_SWAP,
+                              LANES, TRANSFER_LANES, SpanTracer,
+                              chrome_trace_events, export_chrome_trace)
+from repro.obs.validate import validate_chrome_trace, validate_metrics_jsonl
+
+__all__ = [
+    "AuditLog", "MetricsRegistry", "SpanTracer", "SNAPSHOT_KEYS",
+    "LANES", "LANE_ID", "LANE_COMPUTE", "LANE_POLICY_SWAP", "LANE_KV_SPILL",
+    "LANE_CHECKPOINT", "LANE_ADAPT", "TRANSFER_LANES",
+    "chrome_trace_events", "export_chrome_trace",
+    "interval_union", "overlap_efficiency", "window_efficiency",
+    "validate_chrome_trace", "validate_metrics_jsonl",
+    "tracer", "metrics", "audit", "set_tracer", "set_metrics", "set_audit",
+]
+
+_tracer = SpanTracer()
+_metrics = MetricsRegistry()
+_audit = AuditLog()
+
+
+def tracer() -> SpanTracer:
+    """The process-wide default tracer (always on)."""
+    return _tracer
+
+
+def metrics() -> MetricsRegistry:
+    """The process-wide default metrics registry."""
+    return _metrics
+
+
+def audit() -> AuditLog:
+    """The process-wide default drift audit log."""
+    return _audit
+
+
+def set_tracer(t: SpanTracer) -> SpanTracer:
+    global _tracer
+    old, _tracer = _tracer, t
+    return old
+
+
+def set_metrics(m: MetricsRegistry) -> MetricsRegistry:
+    global _metrics
+    old, _metrics = _metrics, m
+    return old
+
+
+def set_audit(a: AuditLog) -> AuditLog:
+    global _audit
+    old, _audit = _audit, a
+    return old

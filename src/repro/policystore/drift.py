@@ -37,6 +37,7 @@ import enum
 from dataclasses import dataclass
 from typing import Optional
 
+from repro import obs
 from repro.policystore.fingerprint import Fingerprint, length_ratio
 from repro.policystore.store import PolicyRecord, PolicyStore
 
@@ -86,8 +87,8 @@ class DriftClassifier:
                  bwmodel=None) -> DriftDecision:
         rec, sim = store.nearest(fp)
         if rec is None:
-            return self._count(DriftDecision(Tier.REGEN, None, 0.0,
-                                             "store empty"))
+            return self._count(self._audit(
+                fp, DriftDecision(Tier.REGEN, None, 0.0, "store empty")))
         lr = max(length_ratio(fp, rec.prepare_fingerprint),
                  length_ratio(fp, rec.fingerprint))
         tier = Tier.REGEN
@@ -112,7 +113,8 @@ class DriftClassifier:
                 if bw > self.cfg.bw_drift_limit:
                     tier = Tier.WARM_START
                     reason += f" bw_drift={bw:.2f}"
-        return self._count(DriftDecision(tier, rec, sim, reason))
+        return self._count(self._audit(
+            fp, DriftDecision(tier, rec, sim, reason)))
 
     def demote(self, decision: DriftDecision, why: str = "") -> DriftDecision:
         """REUSE failed at apply time (matching hit-rate too low): fall to
@@ -122,9 +124,23 @@ class DriftClassifier:
         self.counters[decision.tier.value] -= 1
         self.counters["demoted"] += 1
         self.counters[Tier.WARM_START.value] += 1
+        obs.audit().event(
+            "drift.demote", why=why,
+            from_tier=decision.tier.value, to_tier=Tier.WARM_START.value,
+            similarity=round(decision.similarity, 6),
+            record=decision.record.key[:12] if decision.record else None)
         return DriftDecision(Tier.WARM_START, decision.record,
                              decision.similarity,
                              (decision.reason + " " + why).strip())
+
+    @staticmethod
+    def _audit(fp: Fingerprint, d: DriftDecision) -> DriftDecision:
+        obs.audit().event(
+            "drift.classify", tier=d.tier.value,
+            similarity=round(d.similarity, 6), reason=d.reason,
+            fp=fp.exact[:12], fp_length=fp.length,
+            record=d.record.key[:12] if d.record else None)
+        return d
 
     def _count(self, d: DriftDecision) -> DriftDecision:
         self.counters[d.tier.value] += 1

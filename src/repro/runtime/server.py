@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.common.config import ModelConfig
 from repro.models.registry import get_api
 
@@ -87,6 +88,7 @@ class Server:
         # latency percentiles, and slot occupancy from this.  Bounded: a
         # long-running server keeps a sliding window, not full history
         self.tick_log: collections.deque = collections.deque(maxlen=4096)
+        obs.metrics().register_provider("server", self.latency_stats)
 
     # ----------------------------------------------------------- admission
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -122,7 +124,10 @@ class Server:
     def _place(self, req: Request, slot: int) -> None:
         req.slot = slot
         req.resident_since = self.ticks
-        logits, pstate = self._prefill(self.params, req.prompt[None, :])
+        with obs.tracer().span(obs.LANE_COMPUTE, "prefill",
+                               arg=(req.rid, len(req.prompt))):
+            logits, pstate = self._prefill(self.params, req.prompt[None, :])
+            jax.block_until_ready(logits)
         # scatter single-request prefill state into the shared slots
         self.state = self._write_slot(self.state, pstate, slot,
                                       len(req.prompt))
@@ -200,9 +205,11 @@ class Server:
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for req in self.active.values():
             tokens[req.slot, 0] = req.generated[-1]
-        logits, self.state = self._decode(self.params, jnp.asarray(tokens),
-                                          self.state)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        with obs.tracer().span(obs.LANE_COMPUTE, "decode_tick",
+                               arg=(self.ticks, n_resident)):
+            logits, self.state = self._decode(
+                self.params, jnp.asarray(tokens), self.state)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         out = {}
         finished = []
         for req in self.active.values():

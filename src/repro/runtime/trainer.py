@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpointing.manager import CheckpointManager
 from repro.common.config import (ChameleonConfig, ModelConfig, TrainConfig)
 from repro.core.runtime import ChameleonRuntime
@@ -55,7 +56,9 @@ class Trainer:
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
                  cham: Optional[ChameleonConfig] = None,
                  mesh=None, data: Optional[SyntheticTokens] = None,
-                 eval_data: Optional[SyntheticTokens] = None):
+                 eval_data: Optional[SyntheticTokens] = None,
+                 metrics_out: Optional[str] = None,
+                 metrics_every: int = 25):
         self.cfg, self.tcfg = cfg, tcfg
         self.cham = cham or ChameleonConfig(enabled=False)
         self.mesh = mesh
@@ -85,6 +88,24 @@ class Trainer:
         self._apply = jax.jit(S.make_apply_step(cfg, tcfg))
         self._eval = jax.jit(S.make_eval_step(cfg))
         self._prepared = False
+        # repro.obs: scattered stats() dicts register as lazy providers so
+        # one registry snapshot carries the whole picture; with metrics_out
+        # set, a JSONL snapshot is appended every metrics_every steps
+        self.metrics_out = metrics_out
+        self.metrics_every = max(1, int(metrics_every))
+        reg = obs.metrics()
+        if self.rt.hostmem is not None:
+            reg.register_provider("hostmem", self.rt.hostmem.stats)
+        reg.register_provider("runtime", self._runtime_provider)
+
+    def _runtime_provider(self) -> dict:
+        return {
+            "step": self.step,
+            "stage": self.rt.machine.stage.value,
+            "profiling_overhead_s": self.rt.profiling_overhead_s,
+            "adaptation_overhead_s": self.rt.adaptation_overhead_s,
+            "adaptations": len(self.rt.adaptations),
+        }
 
     # ------------------------------------------------------------- utils
     def _device_batch(self, batch: Dict[str, np.ndarray]):
@@ -153,14 +174,20 @@ class Trainer:
     def _one_step(self, batch, fault_hook=None):
         t0 = time.perf_counter()
         fn = self.rt.step_fn()
-        loss, grads, finite = fn(self.params, batch, self.loss_scale.scale)
-        jax.block_until_ready(loss)
+        with obs.tracer().span(obs.LANE_COMPUTE, "train_step",
+                               arg=self.step):
+            loss, grads, finite = fn(self.params, batch,
+                                     self.loss_scale.scale)
+            jax.block_until_ready(loss)
         self.rt.record_dispatch("train", fn,
                                 (self.params, batch, self.loss_scale.scale))
         finite_h = bool(finite)
         if finite_h:
-            self.params, self.opt_state, _m = self._apply(
-                self.params, self.opt_state, grads)
+            with obs.tracer().span(obs.LANE_COMPUTE, "apply_step",
+                                   arg=self.step):
+                self.params, self.opt_state, _m = self._apply(
+                    self.params, self.opt_state, grads)
+                jax.block_until_ready(self.params)
             self.rt.record_dispatch("apply", self._apply,
                                     (self.params, self.opt_state, grads))
         else:
@@ -171,7 +198,10 @@ class Trainer:
                 and self.step > 0
                 and self.step % self.tcfg.eval_every == 0):
             ebatch = self._device_batch(self.eval_data.next_batch())
-            el = self._eval(self.params, ebatch)
+            with obs.tracer().span(obs.LANE_COMPUTE, "eval_step",
+                                   arg=self.step):
+                el = self._eval(self.params, ebatch)
+                jax.block_until_ready(el)
             self.rt.record_dispatch("eval", self._eval, (self.params, ebatch))
             self.report.eval_losses[self.step] = float(el)
 
@@ -191,3 +221,6 @@ class Trainer:
         if (self.tcfg.checkpoint_every
                 and self.step % self.tcfg.checkpoint_every == 0):
             self._checkpoint()
+
+        if self.metrics_out and self.step % self.metrics_every == 0:
+            obs.metrics().write_jsonl(self.metrics_out)

@@ -1,0 +1,133 @@
+"""Golden-key stats-schema tests (ISSUE 6 satellite).
+
+Dashboards, the launch CLIs, the benchmarks, and the nightly validator
+all read these dicts by key.  A refactor that silently drops a key
+breaks them without failing any behavior test — so the documented key
+sets are pinned here.  Adding keys is fine (supersets pass); removing or
+renaming one must be a deliberate, test-visible change.
+"""
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.common.config import ChameleonConfig
+from repro.core.runtime import ChameleonRuntime
+from repro.hostmem import HostMemTier
+from repro.hostmem import metrics as hm_metrics
+from repro.hostmem.engine import TC_CHECKPOINT, TRAFFIC_CLASSES
+from repro.models.registry import get_api
+from repro.obs import SNAPSHOT_KEYS, MetricsRegistry
+from repro.runtime.server import Server
+
+POOL_KEYS = {
+    "bytes_reserved", "bytes_in_use", "bytes_free", "peak_reserved",
+    "live_blocks", "alloc_count", "reuse_hits", "slab_allocs",
+    "free_count", "hit_rate", "fragmentation",
+}
+ENGINE_KEYS = {
+    "n_out", "n_in", "bytes_out", "bytes_in", "time_out_s", "time_in_s",
+    "gbps_out", "gbps_in", "in_flight", "queued_bytes", "forced_retires",
+    "planned_releases", "current_op", "classes",
+}
+ENGINE_CLASS_KEYS = {
+    "n_out", "n_in", "bytes_out", "bytes_in", "time_out_s", "time_in_s",
+    "forced_retires", "stall_s", "stall_transfers", "preemptions",
+    "released_at_op", "queue_depth", "queued_bytes",
+}
+SERVER_KEYS = {
+    "ticks", "active", "spilled", "queued", "completed", "preemptions",
+    "kv_spill_class", "hostmem", "latency", "policystore",
+}
+RUNTIME_KEYS = {
+    "stage", "transitions", "n_variants", "best_knob", "applied",
+    "release_plan", "contention_s", "profiling_overhead_s",
+    "adaptation_overhead_s", "signature", "hostmem", "policystore", "obs",
+}
+
+
+def test_hostmem_collect_keys():
+    tier = HostMemTier()
+    stats = hm_metrics.collect(tier)
+    assert {"pool", "engine", "bwmodel", "kvspill"} <= set(stats)
+    assert POOL_KEYS <= set(stats["pool"])
+    assert ENGINE_KEYS <= set(stats["engine"])
+    assert set(stats["bwmodel"]) >= {"calibrated", "constant_gbps", "points"}
+
+
+def test_engine_class_keys_and_backlog_gauges():
+    tier = HostMemTier()
+    eng = tier.engine
+    stats = eng.stats()
+    assert set(stats["classes"]) == set(TRAFFIC_CLASSES)
+    for c in stats["classes"].values():
+        assert ENGINE_CLASS_KEYS <= set(c)
+    # live backlog: widen the class window so submits queue, then check
+    # the per-class depth/bytes gauges and the top-level total
+    eng.set_class_depth(TC_CHECKPOINT, 8)
+    evs = [eng.submit_swap_out(np.zeros(128, np.uint8), f"q{i}",
+                               cls=TC_CHECKPOINT) for i in range(4)]
+    assert not any(e.done for e in evs)
+    stats = eng.stats()
+    cs = stats["classes"][TC_CHECKPOINT]
+    assert cs["queue_depth"] == 4
+    assert cs["queued_bytes"] == 4 * 128
+    assert stats["queued_bytes"] == 4 * 128
+    assert eng.queued_bytes(TC_CHECKPOINT) == 4 * 128
+    summary = hm_metrics.format_summary(hm_metrics.collect(tier))
+    assert "queued 4 (0.0 MiB)" in summary
+    eng.synchronize()
+    for e in evs:
+        tier.pool.free(e.block)
+    assert eng.stats()["queued_bytes"] == 0
+
+
+def test_server_stats_keys():
+    cfg = C.get_reduced("llama2_paper")
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.PRNGKey(0))
+    srv = Server(cfg, params, max_batch=2, max_len=32)
+    srv.submit(np.arange(5, dtype=np.int32), max_new_tokens=4)
+    srv.tick()
+    stats = srv.stats()
+    assert SERVER_KEYS <= set(stats)
+    lat = stats["latency"]
+    assert {"n_completed", "ticks", "tokens", "tokens_per_s",
+            "tokens_per_tick", "slot_occupancy", "tick_ms",
+            "queue_wait_ticks", "completion_ticks"} <= set(lat)
+    for pkeys in (lat["tick_ms"], lat["queue_wait_ticks"],
+                  lat["completion_ticks"]):
+        assert {"p50", "p95", "max"} <= set(pkeys)
+
+
+def test_runtime_stats_keys():
+    rt = ChameleonRuntime(ChameleonConfig(), lambda pol: (lambda x: x))
+    stats = rt.stats()
+    assert RUNTIME_KEYS <= set(stats)
+    # the monitoring guard pins this exact set — keep it frozen
+    assert set(stats["signature"]) == {"iterations", "changed_slots",
+                                       "update_tokens"}
+    ob = stats["obs"]
+    assert {"overlap", "tracer", "audit"} <= set(ob)
+    assert {"last", "mean", "measured", "iterations", "transfer_s",
+            "hidden_s"} <= set(ob["overlap"])
+    assert {"n_spans", "retained", "dropped", "capacity",
+            "names"} <= set(ob["tracer"])
+
+
+def test_registry_snapshot_keys():
+    snap = MetricsRegistry().snapshot()
+    assert tuple(snap.keys()) == SNAPSHOT_KEYS
+    assert SNAPSHOT_KEYS == ("time", "seq", "counters", "gauges", "series",
+                             "providers")
+
+
+def test_policystore_stats_keys():
+    rt = ChameleonRuntime(ChameleonConfig(), lambda pol: (lambda x: x))
+    ps = rt.policystore_stats()
+    assert ps is not None
+    assert {"store", "tiers", "adaptations",
+            "genpolicy_steps_total"} <= set(ps)
+    assert {"reuse", "warm_start", "regen", "demoted"} <= set(ps["tiers"])
+    assert {"records", "dir", "lookups", "exact_hits", "sim_hits",
+            "misses", "evictions"} <= set(ps["store"])
