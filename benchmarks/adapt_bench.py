@@ -25,6 +25,19 @@ Scenarios (ISSUE 4 suite):
 Derived columns report GenPolicy steps with the store on vs off plus
 per-tier hit counts; the acceptance bar is ``on < off`` for ``recur``
 and ``genpolicy=0`` for ``cold_restart``.
+
+Drift-stall suite (repro.adapt): the policy store is disabled in BOTH
+modes so every phase switch (alternating seq-len buckets) pays a real
+adaptation, and the worst single-iteration wall time is compared
+across placements.  Inline runs the paper's measured GenPolicy
+iterations (Detailed profiler + Algo-2 search on the training thread),
+so its worst iteration spikes well above the steady median; async
+moves that work to the repro.adapt worker and installs at an iteration
+boundary, so its worst iteration stays within 1.5x of its bucket's
+Stable-stage median.  ``speculative`` additionally pre-generates the
+recurring phase's policy (``spec_hits>=1`` with zero inline GenPolicy
+steps).  Run just this suite with ``python benchmarks/adapt_bench.py
+--drift-only`` (the CI guard does).
 """
 from __future__ import annotations
 
@@ -46,7 +59,8 @@ BUDGET = 8 << 20
 
 
 def _trainer(store_dir: Optional[str], ckdir: str, *, cfg=None, steps=40,
-             eval_every=0, seq=64, batch=4, seed=0) -> Trainer:
+             eval_every=0, seq=64, batch=4, seed=0,
+             adapt_mode: str = "inline") -> Trainer:
     cfg = cfg or C.get_reduced("llama2_paper")
     tcfg = TrainConfig(steps=steps, checkpoint_every=0, checkpoint_dir=ckdir,
                        eval_every=eval_every, warmup_steps=2,
@@ -56,7 +70,7 @@ def _trainer(store_dir: Optional[str], ckdir: str, *, cfg=None, steps=40,
         policystore=PolicyStoreConfig(enabled=store_dir is not None,
                                       dir=store_dir or ""))
     data = SyntheticTokens(cfg.vocab_size, seq, batch, seed=seed)
-    return Trainer(cfg, tcfg, cham, data=data)
+    return Trainer(cfg, tcfg, cham, data=data, adapt_mode=adapt_mode)
 
 
 def _tiers(tr: Trainer) -> str:
@@ -72,6 +86,82 @@ def _recovery_steps(tr: Trainer) -> float:
     """Mean steps from a sequence change back to Stable."""
     a = tr.rt.adaptations
     return float(np.mean([d["steps"] for d in a])) if a else 0.0
+
+
+# drift-stall geometry: two seq-len buckets alternate every 12 steps, so
+# each stream settles, adapts, and *recurs* (the speculative predictor
+# needs a periodic phase pair).  jit compiles — every (policy x shape)
+# pair — amortize over the first three blocks, so the guard window
+# starts at step 36, where both streams are on their 3rd+ visit.
+_DRIFT_STEPS = 60
+_DRIFT_PERIOD = 12
+_DRIFT_SKIP = 36
+
+
+def _drift_run(mode: str, mk) -> tuple:
+    """One store-off run under the given adaptation placement.  Returns
+    (report, worst_s, worst_ratio) where worst_ratio normalizes each
+    step against the Stable-stage median of its *own* bucket — the two
+    streams have different inherent step costs (seq 64 vs 96), so a raw
+    global median would mislabel every slow-bucket step a stall."""
+    cfg = C.get_reduced("llama2_paper")
+    tr = _trainer(None, mk(), cfg=cfg, steps=_DRIFT_STEPS, adapt_mode=mode)
+    buckets = [SyntheticTokens(cfg.vocab_size, 64, 4, seed=0),
+               SyntheticTokens(cfg.vocab_size, 96, 4, seed=1)]
+
+    def hook(step: int):
+        if (step + 1) % _DRIFT_PERIOD == 0:
+            tr.data = buckets[((step + 1) // _DRIFT_PERIOD) % 2]
+
+    try:
+        rep = tr.train(_DRIFT_STEPS, fault_hook=hook)
+    finally:
+        tr.rt.close()
+    # wall_times: compute + end_iteration — inline's stall (Detailed
+    # profiling, Algo-2 generation, re-prepare) happens *inside*
+    # end_iteration, which rep.times deliberately excludes
+    times, stages = rep.wall_times, rep.stages
+
+    def bucket(i: int) -> int:
+        return (i // _DRIFT_PERIOD) % 2
+
+    med = {}
+    for b in (0, 1):
+        stable = [times[i] for i in range(_DRIFT_SKIP, len(times))
+                  if bucket(i) == b and stages[i] == "Stable"]
+        med[b] = (float(np.median(stable)) if stable
+                  else float(np.median(times[_DRIFT_SKIP:])))
+    ratios = [times[i] / max(med[bucket(i)], 1e-9)
+              for i in range(_DRIFT_SKIP, len(times))]
+    worst_i = int(np.argmax(ratios)) + _DRIFT_SKIP
+    return rep, float(times[worst_i]), float(np.max(ratios))
+
+
+def _drift_stall_rows(mk) -> List[tuple]:
+    rep_in, worst_in, ratio_in = _drift_run("inline", mk)
+    rep_as, worst_as, ratio_as = _drift_run("async", mk)
+    ad = rep_as.adapt or {}
+    rows = [(
+        "adapt.drift_stall", worst_as,
+        f"worst_async_ms={worst_as * 1e3:.1f};"
+        f"worst_inline_ms={worst_in * 1e3:.1f};"
+        f"ratio_async={ratio_as:.2f};"
+        f"ratio_inline={ratio_in:.2f};"
+        f"genpolicy_inline={rep_in.genpolicy_steps};"
+        f"installed={ad.get('installed', 0)};jobs={ad.get('jobs', 0)} "
+        f"(bar: ratio_async<=1.5<ratio_inline)")]
+
+    rep_sp, worst_sp, ratio_sp = _drift_run("speculative", mk)
+    sp = rep_sp.adapt or {}
+    rows.append((
+        "adapt.speculative", worst_sp,
+        f"spec_hits={sp.get('speculative_hits', 0)};"
+        f"genpolicy={rep_sp.genpolicy_steps};"
+        f"installed={sp.get('installed', 0)};"
+        f"jobs={sp.get('jobs', 0)};"
+        f"ratio={ratio_sp:.2f} "
+        f"(bar: spec_hits>=1, genpolicy=0)"))
+    return rows
 
 
 def run(iters: int = 1) -> List[tuple]:
@@ -154,7 +244,65 @@ def run(iters: int = 1) -> List[tuple]:
         rows.append((
             "adapt.moe_experts", float(np.median(rep4b.times[5:])),
             f"genpolicy_after_change={rep4b.genpolicy_steps};tiers={_tiers(tr4b)}"))
+
+        # ---- drift-stall: adaptation placement (repro.adapt) -----------
+        rows.extend(_drift_stall_rows(mk))
     finally:
         for d in dirs:
             shutil.rmtree(d, ignore_errors=True)
     return rows
+
+
+def main() -> None:
+    """CI entry: run only the drift-stall suite and enforce its bars."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--drift-only", action="store_true")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="print the rows without asserting the bars")
+    args = ap.parse_args()
+    dirs: List[str] = []
+
+    def mk() -> str:
+        d = tempfile.mkdtemp()
+        dirs.append(d)
+        return d
+
+    try:
+        rows = (_drift_stall_rows(mk) if args.drift_only
+                else run(iters=1))
+    finally:
+        for d in dirs:
+            shutil.rmtree(d, ignore_errors=True)
+    for name, val, detail in rows:
+        print(f"{name},{val * 1e6:.1f},{detail}")
+    if args.no_guard:
+        return
+    by_name = {r[0]: r[2] for r in rows}
+    kv = dict(p.split("=", 1)
+              for p in by_name["adapt.drift_stall"].split(";") if "=" in p)
+    ratio_async = float(kv["ratio_async"])
+    ratio_inline = float(kv["ratio_inline"])
+    if ratio_async > 1.5:
+        raise SystemExit(
+            f"drift-stall guard: async worst iteration is "
+            f"{ratio_async:.2f}x the steady median (bar: <=1.5x)")
+    if ratio_inline <= 1.5:
+        raise SystemExit(
+            f"drift-stall guard: inline worst/median {ratio_inline:.2f} "
+            f"<=1.5 — the scenario is not paying a visible inline "
+            f"adaptation, so the async comparison is vacuous")
+    sp = dict(p.split("=", 1)
+              for p in by_name["adapt.speculative"].split(";") if "=" in p)
+    if int(sp["spec_hits"]) < 1:
+        raise SystemExit("drift-stall guard: speculative mode never "
+                         "pre-generated the recurring policy")
+    if int(sp["genpolicy"]) != 0:
+        raise SystemExit("drift-stall guard: speculative mode ran inline "
+                         "GenPolicy iterations")
+    print("drift-stall guard: ok")
+
+
+if __name__ == "__main__":
+    main()

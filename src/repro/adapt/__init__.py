@@ -1,0 +1,35 @@
+"""repro.adapt — the adaptation pipeline as an async background service.
+
+The paper's §5 cycle (Detailed profiling → GenPolicy variant search →
+policy application) extracted out of ``ChameleonRuntime`` into:
+
+  * :class:`AdaptSnapshot` — the immutable inputs one adaptation reads
+    (traced program, frozen bandwidth curve, per-class link backlog,
+    budget, knobs, source fingerprint);
+  * :class:`AdaptationPipeline` — the cycle itself as deterministic
+    computation, shared by the inline reference mode and the worker;
+  * :class:`AdaptationService` — job queue + single worker thread +
+    single-slot mailbox + generation-counter staleness, plus speculative
+    pre-generation of policies for predicted-recurring fingerprints.
+
+See ``docs/adaptation.md`` for the job lifecycle and swap-in protocol.
+"""
+from repro.adapt.pipeline import (VARIANT_KNOBS, AdaptResult,
+                                  AdaptationPipeline, CachedApply,
+                                  PolicyVariant)
+from repro.adapt.service import (AdaptJob, AdaptationService,
+                                 RecurrencePredictor)
+from repro.adapt.snapshot import AdaptSnapshot, FrozenBacklog
+
+__all__ = [
+    "AdaptJob",
+    "AdaptResult",
+    "AdaptSnapshot",
+    "AdaptationPipeline",
+    "AdaptationService",
+    "CachedApply",
+    "FrozenBacklog",
+    "PolicyVariant",
+    "RecurrencePredictor",
+    "VARIANT_KNOBS",
+]

@@ -1,0 +1,79 @@
+"""Immutable adaptation inputs (repro.adapt).
+
+An :class:`AdaptSnapshot` freezes everything the §5 adaptation cycle
+reads, at the moment drift settles, so the background worker never
+touches live runtime state:
+
+  * the traced baseline jaxpr (or an already-materialized
+    :class:`~repro.core.profiler.ProfileData`) plus the measured
+    ``t_iter`` it should be priced at;
+  * a *copy* of the bandwidth-model curve
+    (:meth:`~repro.hostmem.bwmodel.BandwidthModel.snapshot`) — variant
+    pricing must not chase the live EMA mid-search;
+  * the transfer engine's per-class backlog at snapshot time
+    (``queued_delay`` seconds + per-class queued bytes) — the sustained
+    contention the simulator charges, frozen the same way;
+  * the HBM budget and the grouping knobs the search will try;
+  * the iteration fingerprint (exact hash) identifying the op stream the
+    snapshot was taken from — the staleness check compares a published
+    result's source fingerprint against the live stream before install.
+
+The profile is materialized lazily (:meth:`ensure_profile`): the common
+recurring-drift case snapshots a *cached* jaxpr on the training thread
+(cheap), and the worker pays the ``profile_jaxpr`` traversal off the
+critical path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.profiler import ProfileData, profile_jaxpr
+
+
+class FrozenBacklog:
+    """Engine stand-in for snapshot-time contention: answers
+    ``queued_delay`` with the frozen per-class estimate so
+    ``generate_policy`` prices the backlog the snapshot saw, not whatever
+    the live engine is doing when the worker happens to run."""
+
+    def __init__(self, delays: Optional[Dict[str, float]] = None,
+                 default: float = 0.0):
+        self._delays = dict(delays or {})
+        self._default = float(default)
+
+    def queued_delay(self, cls: str = "policy_swap",
+                     kind: str = "swap_out") -> float:
+        return self._delays.get(cls, self._default)
+
+
+@dataclass
+class AdaptSnapshot:
+    """One adaptation's frozen inputs.  Treated as immutable after
+    construction; ``profile`` is the only field written later (the lazy
+    ``ensure_profile`` memo) and only ever from the worker thread."""
+    jaxpr: Any = None                    # traced baseline program
+    t_iter: float = 1.0                  # measured iteration time to price at
+    budget: int = 0                      # HBM budget (bytes)
+    bwmodel: Any = None                  # frozen BandwidthModel copy (or None)
+    contention_s: float = 0.0            # queued_delay at snapshot time
+    backlog: Dict[str, dict] = field(default_factory=dict)  # per-class gauges
+    gen_knobs: Tuple[float, ...] = ()    # grouping knobs the search tries
+    iter_exact: Optional[str] = None     # live-stream fingerprint (exact hash)
+    iter_fp: Any = None                  # full iteration Fingerprint (or None)
+    step: int = 0                        # step the snapshot was taken at
+    profile: Optional[ProfileData] = None
+
+    def ensure_profile(self) -> ProfileData:
+        """Materialize the Detailed-mode profile (worker-side cost)."""
+        if self.profile is None:
+            if self.jaxpr is None:
+                raise ValueError("snapshot carries neither profile nor jaxpr")
+            self.profile = profile_jaxpr(self.jaxpr, t_iter=self.t_iter)
+        return self.profile
+
+    def engine_view(self) -> FrozenBacklog:
+        """The frozen-contention engine stand-in for policy generation."""
+        delays = {c: float(d.get("queued_delay", 0.0))
+                  for c, d in self.backlog.items()}
+        return FrozenBacklog(delays, default=self.contention_s)

@@ -278,6 +278,45 @@ class PolicyStoreConfig:
 
 
 @dataclass(frozen=True)
+class AdaptConfig:
+    """Adaptation-pipeline placement (repro.adapt).
+
+    ``mode`` decides where the §5 adaptation cycle (Detailed profiling →
+    GenPolicy variant search → policy application) runs:
+
+      * ``inline`` — the reference mode: adaptation runs on the training
+        thread exactly as the paper describes (one measured variant per
+        GenPolicy iteration); every async result can be asserted
+        equivalent to what this mode produces for the same snapshot;
+      * ``async`` — drift enqueues an :class:`~repro.adapt.AdaptJob`
+        carrying an immutable snapshot; a background worker runs the
+        variant search against it and publishes the winner to a
+        single-slot mailbox, installed at the next iteration boundary
+        while the old policy keeps serving;
+      * ``speculative`` — ``async`` plus pre-generation: when the
+        service predicts a recurring fingerprint (train→eval interleaves
+        are periodic) it pre-builds that policy in idle background time
+        so the phase switch costs 0 inline GenPolicy steps even on a
+        cold mailbox.
+    """
+    mode: str = "inline"                 # inline | async | speculative
+    # bounded service memory: parked speculative results and retained
+    # snapshots (keyed by iteration fingerprint) are LRU-capped
+    max_parked: int = 8
+    max_snapshots: int = 16
+    # fingerprint-transition history window the recurrence predictor sees
+    history: int = 64
+    # GIL-cooperative worker pacing: the background worker sleeps between
+    # variant simulations (at least ``pace_s``, at least one snapshot
+    # t_iter, capped at ``pace_cap_s``) so an overlapped training step
+    # contends with at most one variant's worth of host-side work instead
+    # of the whole bank.  Costs background latency only — the job still
+    # lands within the drift window.  0 disables pacing.
+    pace_s: float = 0.02
+    pace_cap_s: float = 0.25
+
+
+@dataclass(frozen=True)
 class ChameleonConfig:
     """Paper hyperparameters (§4, §5, §7.1)."""
     enabled: bool = True
@@ -295,6 +334,7 @@ class ChameleonConfig:
     hbm_gbps: float = 819.0
     hostmem: HostMemConfig = HostMemConfig()     # host-memory tier (repro.hostmem)
     policystore: PolicyStoreConfig = PolicyStoreConfig()  # repro.policystore
+    adapt: AdaptConfig = AdaptConfig()           # adaptation placement (repro.adapt)
 
 
 @dataclass(frozen=True)

@@ -31,15 +31,23 @@ class MRL:
     def remaining_ops(self) -> np.ndarray:
         return self.ops[self.required > 0]
 
+    # ops is sorted, so the [birth, death) window is one searchsorted
+    # slice instead of two O(n) boolean masks — covered_count/decrement
+    # run per candidate inside Algo 2's inner loop, making this the last
+    # per-candidate O(n_mre) cost in Simulator.simulate
+    def _window(self, birth: int, death: int) -> slice:
+        lo = int(np.searchsorted(self.ops, birth, side="left"))
+        hi = int(np.searchsorted(self.ops, death, side="left"))
+        return slice(lo, max(hi, lo))
+
     def covered_count(self, birth: int, death: int) -> int:
         """Number of outstanding MREs inside [birth, death)."""
-        m = (self.ops >= birth) & (self.ops < death) & (self.required > 0)
-        return int(np.count_nonzero(m))
+        w = self._window(birth, death)
+        return int(np.count_nonzero(self.required[w] > 0))
 
     def decrement(self, birth: int, death: int, nbytes: int) -> None:
         """Tensor of `nbytes` leaves the device for ops in [birth, death)."""
-        m = (self.ops >= birth) & (self.ops < death)
-        self.required[m] -= nbytes
+        self.required[self._window(birth, death)] -= nbytes
 
     def max_required(self) -> int:
         return int(self.required.max(initial=0))

@@ -16,42 +16,41 @@ During GenPolicy the runtime generates one policy variant per step (varying
 the logical-layer grouping knob) and, after n steps, keeps the variant with
 the best measured iteration time — the paper's §7.1 "generates five policies
 and selects the one with the best runtime performance".
+
+The adaptation *pipeline* (classification, cached-policy re-association,
+variant construction, store write-back) lives in ``repro.adapt``; this
+module keeps the iteration-loop state machine and the install points.
+With ``cfg.adapt.mode`` set to ``async`` or ``speculative`` the settled
+WarmUp enqueues an :class:`~repro.adapt.AdaptSnapshot` to the background
+:class:`~repro.adapt.AdaptationService` instead of running GenPolicy
+iterations inline; the worker's result installs at the next iteration
+boundary (after the engine feedback of the policy that just ran), so
+drift never stalls an iteration.
 """
 from __future__ import annotations
 
 import collections
-import dataclasses
 import time
-from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro import obs
+# PolicyVariant / VARIANT_KNOBS moved to repro.adapt.pipeline; re-exported
+# here because callers import them from the runtime module
+from repro.adapt import (VARIANT_KNOBS, AdaptResult, AdaptSnapshot,
+                         AdaptationPipeline, AdaptationService, PolicyVariant)
 from repro.common.config import ChameleonConfig
 from repro.core import tokenizer
 from repro.core.executor import AppliedPolicy, Executor
-from repro.core.matching import remap_policy
 from repro.core.memtrace import build_timeline
 from repro.core.oom import warmup_offload_sites
-from repro.core.policy import (ChameleonOOMError, SwapPolicy,
-                               generate_policy, projected_peak)
+from repro.core.policy import ChameleonOOMError, SwapPolicy
 from repro.core.profiler import ProfileData, profile_jaxpr
 from repro.core.stages import Stage, StageMachine
-from repro.policystore import (DriftClassifier, PolicyRecord, PolicyStore,
-                               Tier, fingerprint_profile,
-                               fingerprint_signature)
+from repro.policystore import DriftClassifier, PolicyStore, Tier
 
-# grouping knobs tried across the n GenPolicy steps (variant selection)
-VARIANT_KNOBS = (1.0, 2.0, 0.5, 4.0, 0.25)
-
-
-@dataclass
-class PolicyVariant:
-    applied: AppliedPolicy
-    swap: Optional[SwapPolicy]
-    knob: float
-    measured_t: Optional[float] = None
+__all__ = ["ChameleonRuntime", "PolicyVariant", "VARIANT_KNOBS"]
 
 
 class ChameleonRuntime:
@@ -62,7 +61,6 @@ class ChameleonRuntime:
         self.budget = budget if budget is not None else cfg.hbm_budget_bytes
         self.step_builder = step_builder
         self.executor = Executor(cfg)
-        self.machine = StageMachine(cfg)
         if hostmem is None and cfg.enabled and cfg.hostmem.enabled:
             from repro.hostmem import HostMemTier
             hostmem = HostMemTier.from_chameleon(cfg)
@@ -70,6 +68,19 @@ class ChameleonRuntime:
         self._step_cache: Dict[str, Callable] = {}
         self._trace_cache: Dict[Tuple, tokenizer.TokenStream] = {}
         self._jaxpr_cache: Dict[Tuple, Any] = {}
+        # baseline profile per arg-shape key — pure memoization of
+        # profile_jaxpr over the cached baseline trace, so a WarmUp
+        # re-entry onto a recurring shape bucket skips both the re-trace
+        # and the (pure-Python) profile traversal on the training thread
+        self._baseprof_cache: Dict[Tuple, ProfileData] = {}
+        # detailed profiles of streams adapted before, keyed by iteration
+        # fingerprint: a recurring stream's snapshot carries its profile so
+        # the worker skips the (GIL-heavy) profile_jaxpr traversal — only a
+        # stream's *first* adaptation pays it.  The profile keeps the
+        # t_iter it was measured at; a recurrence prices with that.
+        self._profile_lru: "collections.OrderedDict[str, ProfileData]" = \
+            collections.OrderedDict()
+        self._profile_lru_cap = 8
         self.applied: AppliedPolicy = self.executor.baseline()
         self.profile: Optional[ProfileData] = None
         self.baseline_profile: Optional[ProfileData] = None
@@ -78,10 +89,8 @@ class ChameleonRuntime:
         # applied only for dispatch slots whose content hash changed
         self._sig_acc = tokenizer.SignatureAccumulator()
         self._example_args: Optional[tuple] = None
-        self.variants: List[PolicyVariant] = []
         self._pending_variant: Optional[PolicyVariant] = None
         self._mirror_src: Optional[np.ndarray] = None
-        self.best: Optional[PolicyVariant] = None
         self.step_idx = 0
         self.history: List[dict] = []
         self.profiling_overhead_s = 0.0      # steady-state Lightweight mode
@@ -92,6 +101,18 @@ class ChameleonRuntime:
         if cfg.enabled and cfg.policystore.enabled:
             self.store = PolicyStore(cfg.policystore)
             self.drift = DriftClassifier(cfg.policystore)
+        # ---- adaptation pipeline + placement (repro.adapt): the §5 cycle
+        # itself is pipeline code shared by every mode; the service owns
+        # variant bookkeeping plus the async worker/mailbox machinery
+        adapt_mode = cfg.adapt.mode if cfg.enabled else "inline"
+        self.pipeline = AdaptationPipeline(cfg, self.executor,
+                                           store=self.store, drift=self.drift,
+                                           hostmem=self.hostmem)
+        self.service = AdaptationService(
+            self.pipeline, adapt_mode, max_parked=cfg.adapt.max_parked,
+            max_snapshots=cfg.adapt.max_snapshots, history=cfg.adapt.history,
+            pace_s=cfg.adapt.pace_s, pace_cap_s=cfg.adapt.pace_cap_s)
+        self.machine = StageMachine(cfg, async_mode=adapt_mode != "inline")
         self._gen_knobs: Tuple[float, ...] = VARIANT_KNOBS
         self._last_sig: Optional[tokenizer.Signature] = None
         # dispatch-shape drift: same primitives, different memory profile
@@ -100,14 +121,36 @@ class ChameleonRuntime:
         self._train_shape: Optional[Tuple] = None
         self._prev_train_shape: Optional[Tuple] = None
         self._last_decision = None           # DriftDecision of this adaptation
-        self._adapt_mark: Optional[Tuple[int, float]] = None
-        self.adaptations: List[dict] = []
         # per-iteration swap/compute overlap (repro.obs): fraction of
         # engine transfer time hidden under compute spans this iteration
         self._iter_t0 = time.perf_counter()
         self.overlap_history: collections.deque = collections.deque(
             maxlen=512)
         obs.tracer().set_iteration(self.step_idx)
+
+    # ------------------------------------------- adaptation state (service)
+    # the GenPolicy variant list, selection winner, and adaptation-latency
+    # records moved into AdaptationService with the pipeline extraction;
+    # these properties keep the runtime's public surface unchanged
+    @property
+    def variants(self) -> List[PolicyVariant]:
+        return self.service.variants
+
+    @variants.setter
+    def variants(self, v) -> None:
+        self.service.variants = list(v)
+
+    @property
+    def best(self) -> Optional[PolicyVariant]:
+        return self.service.best
+
+    @best.setter
+    def best(self, v) -> None:
+        self.service.best = v
+
+    @property
+    def adaptations(self) -> List[dict]:
+        return self.service.adaptations
 
     # ------------------------------------------------------------ helpers
     def _args_key(self, args) -> Tuple:
@@ -144,12 +187,15 @@ class ChameleonRuntime:
         self._example_args = example_args
         if not self.cfg.enabled:
             return self.applied
-        if self._adapt_mark is None:
-            self._adapt_mark = (self.step_idx, time.perf_counter())
+        self.service.begin(self.step_idx)
         with obs.tracer().span(obs.LANE_ADAPT, "prepare", arg=self.step_idx):
+            key = ("baseline",) + self._args_key(example_args)
             cj = self._baseline_jaxpr(example_args)
-            prof = profile_jaxpr(cj, t_iter=1.0)   # timing unknown pre-run;
-            self.baseline_profile = prof           # warm-up fit: memory-only
+            prof = self._baseprof_cache.get(key)
+            if prof is None:
+                prof = profile_jaxpr(cj, t_iter=1.0)  # timing unknown
+                self._baseprof_cache[key] = prof      # pre-run; memory-only
+            self.baseline_profile = prof              # warm-up fit
             tl = build_timeline(prof)
             if self.store is not None and self._try_policystore(prof, tl):
                 return self.applied            # reuse tier: cached policy
@@ -179,19 +225,14 @@ class ChameleonRuntime:
             release_plan=len(self.applied.release_plan))
 
     # ------------------------------------------- policystore (repro.policystore)
-    def _fingerprint(self, prof: ProfileData):
-        ps = self.cfg.policystore
-        return fingerprint_profile(prof, n_perms=ps.minhash_perms,
-                                   shingle=ps.shingle)
-
     def _try_policystore(self, prof: ProfileData, tl) -> bool:
-        """Classify the observed program against the store.  Returns True
-        when a reuse-tier hit applied a cached policy (callers skip the
-        WarmUp fit); warm-start/regen configure the variant search and
-        return False."""
-        fp = self._fingerprint(prof)
-        decision = self.drift.classify(
-            fp, self.store, budget=self.budget,
+        """Classify the observed program against the store (pipeline code)
+        and *install* the outcome (runtime's job).  Returns True when a
+        reuse-tier hit applied a cached policy (callers skip the WarmUp
+        fit); warm-start/regen configure the variant search and return
+        False."""
+        fp, decision = self.pipeline.classify(
+            prof, self.budget,
             bwmodel=self.hostmem.bwmodel if self.hostmem else None)
         if decision.tier is Tier.REUSE:
             # identity must be a hash test, not a float threshold: blended
@@ -200,11 +241,19 @@ class ChameleonRuntime:
             rec = decision.record
             exact = rec is not None and fp.exact in (
                 rec.prepare_fingerprint.exact, rec.fingerprint.exact)
-            applied = self._apply_cached(rec, prof, tl, exact_hit=exact)
-            if applied is not None:
+            hit = self.pipeline.apply_cached(rec, prof, tl, self.budget,
+                                             exact_hit=exact)
+            if hit is not None:
                 self._last_decision = decision
-                self.applied = applied
-                self.store.touch(decision.record)
+                self.applied = hit.applied
+                if hit.profile is not None:
+                    # the schedule remapped: engine feedback follows it
+                    self.profile = hit.profile
+                    if self.hostmem is not None:
+                        self.executor.bind_release_points(
+                            self.applied, self.hostmem.engine)
+                        self.hostmem.engine.begin_iteration()
+                self.store.touch(rec)
                 self.machine.force_stable(self.step_idx, "policystore-reuse")
                 self.machine.n_genpolicy = None
                 self._gen_knobs = VARIANT_KNOBS
@@ -213,59 +262,11 @@ class ChameleonRuntime:
                 return True
             decision = self.drift.demote(decision, "match-miss")
         self._last_decision = decision
-        if decision.tier is Tier.WARM_START and decision.record is not None:
-            # seed the search from the cached winner + one alternative;
-            # converges in 1-2 GenPolicy steps instead of five (§7.1)
-            seed = decision.record.knob
-            alt = next((k for k in VARIANT_KNOBS if k != seed),
-                       VARIANT_KNOBS[0])
-            self._gen_knobs = (seed, alt)
-            self.machine.n_genpolicy = len(self._gen_knobs) - 1
-        else:
-            self._gen_knobs = VARIANT_KNOBS
-            self.machine.n_genpolicy = None
+        self._gen_knobs = self.pipeline.warm_knobs(decision)
+        self.machine.n_genpolicy = (len(self._gen_knobs) - 1
+                                    if self._gen_knobs != VARIANT_KNOBS
+                                    else None)
         return False
-
-    def _apply_cached(self, record: PolicyRecord, prof: ProfileData,
-                      tl, exact_hit: bool = False) -> Optional[AppliedPolicy]:
-        """Re-associate a cached policy with the observed program (§6.1
-        fuzzy matching) and lower it.  None -> the record does not carry
-        over (low match hit-rate, or a cached no-swap decision that no
-        longer fits) and the caller falls back a tier."""
-        swap = record.swap_policy()
-        if swap is None:
-            if record.policy_kind == "conservative":
-                # the winner was the offload-all fallback: guaranteed to
-                # fit by construction, but it carries no remappable
-                # evidence — only the *identical* program may reuse it
-                # (a merely similar one, e.g. another seq-len bucket,
-                # would otherwise be pinned to the slow fallback forever
-                # without ever running its own variant search)
-                return self.executor.conservative(prof) if exact_hit else None
-            # cached adaptation concluded the baseline fits — verify that
-            # still holds for the observed program before trusting it
-            if tl.peak > self.budget:
-                return None
-            return self.executor.baseline()
-        entries, hit = remap_policy(swap, record.profile_stub(), prof)
-        if not entries or hit < self.cfg.policystore.min_reuse_hit_rate:
-            return None
-        # a partially remapped schedule offloads fewer bytes than the one
-        # that was priced to fit — re-verify against the observed timeline
-        # before trusting it (same guard as the cached-baseline path)
-        projected = projected_peak(prof, entries)
-        if projected > self.budget:
-            return None
-        new_swap = dataclasses.replace(swap, entries=entries,
-                                       projected_peak=projected,
-                                       baseline_peak=tl.peak,
-                                       budget=self.budget)
-        applied = self.executor.lower(new_swap, prof)
-        self.profile = prof
-        if self.hostmem is not None:
-            self.executor.bind_release_points(applied, self.hostmem.engine)
-            self.hostmem.engine.begin_iteration()
-        return applied
 
     def _store_result(self) -> None:
         """Write the adaptation winner back to the store, keyed by the
@@ -273,55 +274,24 @@ class ChameleonRuntime:
         full iteration signature (mid-run drift similarity)."""
         if self.store is None or self.best is None or self.profile is None:
             return
-        prof = self.profile
-        ps = self.cfg.policystore
-        prep_fp = self._fingerprint(prof)
+        iter_fp = None
         if self._last_sig is not None and len(self._last_sig):
             # virtual-length-aware: capped scan materializations must not
             # collapse different layer counts into one iteration key
-            iter_fp = fingerprint_signature(self._last_sig,
-                                            n_perms=ps.minhash_perms,
-                                            shingle=ps.shingle)
-        else:
-            iter_fp = prep_fp
-        kind = ("swap" if self.best.swap is not None
-                else "conservative" if self.best.applied.offload
-                else "baseline")
-        rec = PolicyRecord.from_policy(
-            fingerprint=iter_fp, prepare_fingerprint=prep_fp,
-            swap=self.best.swap, candidates=prof.candidates,
-            n_ops=prof.n_ops, knob=self.best.knob,
-            measured_t=self.best.measured_t or 0.0, budget=self.budget,
-            bwmodel=self.hostmem.bwmodel if self.hostmem else None,
-            policy_kind=kind)
+            iter_fp = self.pipeline.iteration_fingerprint(self._last_sig)
+        rec = self.pipeline.build_record(
+            self.best, self.profile, self.budget, iter_fp=iter_fp,
+            bwmodel=self.hostmem.bwmodel if self.hostmem else None)
         self.store.put(rec)
         obs.audit().event(
-            "policy.store_put", key=rec.key[:12], policy_kind=kind,
-            knob=self.best.knob,
+            "policy.store_put", key=rec.key[:12],
+            policy_kind=rec.policy_kind, knob=self.best.knob,
             measured_t=round(self.best.measured_t or 0.0, 6),
             step=self.step_idx)
 
     def _finish_adaptation(self, tier: str) -> None:
         """Close the adaptation-latency window opened by ``prepare``."""
-        if self._adapt_mark is None:
-            return
-        start_step, t0 = self._adapt_mark
-        self._adapt_mark = None
-        rec = {
-            "trigger_step": start_step,
-            "end_step": self.step_idx,
-            "steps": self.step_idx - start_step,
-            "seconds": time.perf_counter() - t0,
-            "tier": tier,
-            "genpolicy_steps": len(self.variants),
-        }
-        self.adaptations.append(rec)
-        obs.audit().event("adaptation.done", tier=tier,
-                          trigger_step=start_step, end_step=self.step_idx,
-                          seconds=round(rec["seconds"], 6),
-                          genpolicy_steps=rec["genpolicy_steps"])
-        obs.metrics().counter("adaptations")
-        obs.metrics().gauge("adaptation_seconds", rec["seconds"])
+        self.service.finish(tier, self.step_idx)
 
     # ------------------------------------------------------ per-iteration
     def step_fn(self) -> Callable:
@@ -386,15 +356,31 @@ class ChameleonRuntime:
             self._genpolicy_step(t_iter)
         elif stage is Stage.STABLE and prev_stage is Stage.GENPOLICY:
             self._select_best()
+        elif stage is Stage.ADAPTING and prev_stage is not Stage.ADAPTING:
+            # async placement: the sequence settled — hand the background
+            # worker an immutable snapshot (or install a parked
+            # speculative result on the spot) and keep iterating
+            self._async_kickoff(t_iter)
         elif stage is Stage.WARMUP and (prev_stage is not Stage.WARMUP
                                         or shape_drift):
             # sequence (or dispatch shape) changed: back to the
             # conservative fit (Fig 2 loop) — shape drift re-prepares even
             # when observe() left the machine in/through WarmUp this step
-            self.variants, self.best = [], None
+            self.service.reset_search()
+            if self.machine.async_mode:
+                # supersede anything in flight for the old stream
+                self.service.invalidate("shape-drift" if shape_drift
+                                        else "seq-change")
             if self._example_args is not None:
                 args = getattr(self, "_last_train_args", self._example_args)
-                self._jaxpr_cache.clear()
+                if not self.machine.async_mode:
+                    # inline (reference mode): re-trace + re-profile from
+                    # scratch, as the paper's loop does.  Async keeps the
+                    # shape-keyed caches so a recurring bucket's re-entry
+                    # costs a dict hit, not a trace — genuinely new
+                    # shapes miss the key and still pay once.
+                    self._jaxpr_cache.clear()
+                    self._baseprof_cache.clear()
                 self.prepare(args)
         adapt_dt = time.perf_counter() - t_adapt
         self.adaptation_overhead_s += adapt_dt
@@ -409,6 +395,15 @@ class ChameleonRuntime:
             eng = self.hostmem.engine
             eng.advance_op(max(ran.release_plan.values()))
             eng.begin_iteration()
+        # async swap-in point: only *after* the executed policy's engine
+        # feedback drained may a worker result replace self.applied — the
+        # iteration boundary the swap-in protocol promises
+        if self.machine.stage is Stage.ADAPTING:
+            t_install = time.perf_counter()
+            res = self.service.poll()
+            if res is not None:
+                self._install_result(res, "adapt-installed")
+            self.adaptation_overhead_s += time.perf_counter() - t_install
         self.history.append({"step": self.step_idx, "stage": stage.value,
                              "policy": self.applied.fingerprint,
                              "t_iter": t_iter})
@@ -487,30 +482,16 @@ class ChameleonRuntime:
         prof = profile_jaxpr(cj, t_iter=t_iter)   # Detailed mode
         self.profile = prof
         knob = self._gen_knobs[len(self.variants) % len(self._gen_knobs)]
-        groups = max(1, int((prof.scan_layers or 32) * knob))
-        cfg_v = dataclasses.replace(self.cfg, groups_per_phase=groups)
-        tl = build_timeline(prof)
         hm = self.hostmem
-        try:
-            if tl.peak > self.budget:
-                # bwmodel prices transfer sizes and the engine prices the
-                # live per-class link backlog for every variant; free-times
-                # are handed to the engine only for the variant that wins
-                # (_select_best)
-                swap = generate_policy(
-                    prof, cfg_v, self.budget, timeline=tl,
-                    bwmodel=hm.bwmodel if hm else None,
-                    engine=hm.engine if hm else None,
-                    register_free_times=False)
-                applied = self.executor.lower(swap, prof)
-            else:
-                swap, applied = None, self.executor.baseline()
-        except ChameleonOOMError:
-            swap, applied = None, self.executor.conservative(prof)
-        var = PolicyVariant(applied, swap, knob)
+        # bwmodel prices transfer sizes and the engine prices the live
+        # per-class link backlog for every variant; free-times are handed
+        # to the engine only for the variant that wins (_select_best)
+        var = self.pipeline.variant(prof, knob, self.budget,
+                                    bwmodel=hm.bwmodel if hm else None,
+                                    engine=hm.engine if hm else None)
         self.variants.append(var)
         self._pending_variant = var
-        self.applied = applied                     # next iteration runs it
+        self.applied = var.applied                 # next iteration runs it
 
     def _select_best(self) -> None:
         with obs.tracer().span(obs.LANE_ADAPT, "select_best",
@@ -546,6 +527,77 @@ class ChameleonRuntime:
                                               self.hostmem.engine)
             self.hostmem.engine.begin_iteration()
 
+    # ------------------------------------------ async placement (repro.adapt)
+    def _snapshot(self, args, t_iter: float) -> AdaptSnapshot:
+        """Freeze this adaptation's inputs.  Tracing stays on the training
+        thread (and is cached for recurring streams); the worker only pays
+        the profile traversal — never a concurrent jax trace."""
+        cj = self._baseline_jaxpr(args)
+        hm = self.hostmem
+        iter_fp = None
+        if self._last_sig is not None and len(self._last_sig):
+            iter_fp = self.pipeline.iteration_fingerprint(self._last_sig)
+        cached_prof = (self._profile_lru.get(iter_fp.exact)
+                       if iter_fp is not None else None)
+        return AdaptSnapshot(
+            jaxpr=cj, t_iter=t_iter, budget=self.budget,
+            bwmodel=hm.bwmodel.snapshot() if hm else None,
+            contention_s=hm.engine.queued_delay() if hm else 0.0,
+            backlog=hm.engine.backlog_snapshot() if hm else {},
+            gen_knobs=(),                  # worker classifies + seeds itself
+            iter_exact=iter_fp.exact if iter_fp is not None else None,
+            iter_fp=iter_fp, step=self.step_idx, profile=cached_prof)
+
+    def _async_kickoff(self, t_iter: float) -> None:
+        """ADAPTING entry: install a parked speculative result if the
+        observed stream has one (zero inline GenPolicy steps, nothing in
+        flight), otherwise enqueue the snapshot for the worker."""
+        args = getattr(self, "_last_train_args", self._example_args)
+        if args is None:
+            return
+        snap = self._snapshot(args, t_iter)
+        self.service.begin(self.step_idx)
+        hit = self.service.take_speculative(snap.iter_exact)
+        if hit is not None:
+            self._install_result(hit, "speculative-hit")
+            return
+        self.service.submit(snap)
+
+    def _install_result(self, res: AdaptResult, why: str) -> None:
+        """Swap-in: adopt a completed (worker or parked speculative)
+        adaptation at the iteration boundary.  Mirrors the inline
+        ``_select_best_timed`` install — applied policy, engine release
+        points, stage transition, accounting."""
+        self.applied = res.applied
+        if res.profile is not None:
+            self.profile = res.profile
+            if res.iter_exact:           # recurrences skip worker profiling
+                self._profile_lru[res.iter_exact] = res.profile
+                self._profile_lru.move_to_end(res.iter_exact)
+                while len(self._profile_lru) > self._profile_lru_cap:
+                    self._profile_lru.popitem(last=False)
+        self.best = PolicyVariant(res.applied, res.swap,
+                                  res.knob if res.knob is not None else 1.0,
+                                  measured_t=None)
+        if self.hostmem is not None and res.swap is not None:
+            self.applied.release_plan = {
+                SwapPolicy.entry_tag(e): e.swap_out_done_op
+                for e in res.swap.entries if e.swap_out_done_op >= 0}
+            self.executor.bind_release_points(self.applied,
+                                              self.hostmem.engine)
+            self.hostmem.engine.begin_iteration()
+        self.machine.complete_adapting(self.step_idx, why)
+        self.machine.n_genpolicy = None
+        self._gen_knobs = VARIANT_KNOBS
+        self._audit_apply(res.kind, knob=res.knob)
+        self.service.note_adapted(res.iter_exact)
+        self.service.finish(res.tier, self.step_idx)
+        self._last_decision = None
+
+    def close(self) -> None:
+        """Stop the background worker (no-op for inline placement)."""
+        self.service.close()
+
     # ----------------------------------------------------------- reports
     def stats(self) -> dict:
         return {
@@ -562,6 +614,7 @@ class ChameleonRuntime:
             "signature": self._sig_acc.stats(),
             "hostmem": self.hostmem.stats() if self.hostmem else None,
             "policystore": self.policystore_stats(),
+            "adapt": self.service.stats(),
             "obs": self.obs_stats(),
         }
 

@@ -23,6 +23,10 @@ class Stage(enum.Enum):
     WARMUP = "WarmUp"
     GENPOLICY = "GenPolicy"
     STABLE = "Stable"
+    # async placement (repro.adapt): the sequence has settled and the
+    # variant search is running on the background worker — profiling
+    # stays Lightweight and iterations keep serving the old policy
+    ADAPTING = "Adapting"
 
 
 @dataclass
@@ -36,6 +40,11 @@ class StageMachine:
     # policystore warm start shrinks the GenPolicy variant search to the
     # seeded knobs instead of the full five
     n_genpolicy: Optional[int] = None
+    # async placement (repro.adapt): a settled WarmUp enters ADAPTING
+    # (worker searches in the background) instead of GENPOLICY (inline
+    # measured search); complete_adapting() moves on to STABLE when the
+    # runtime installs the worker's result at an iteration boundary
+    async_mode: bool = False
 
     def observe(self, op_seq, step: int = -1) -> Stage:
         """Algo 1: feed one iteration's operator sequence — either a raw
@@ -58,7 +67,11 @@ class StageMachine:
         if stable:
             self.stable_step += 1
             if prev_stage is Stage.WARMUP and self.stable_step > self.cfg.m_warmup_stable:
-                self.stage, self.stable_step = Stage.GENPOLICY, 0
+                # async: hold in ADAPTING (Lightweight profiling, old
+                # policy serving) until the worker's result installs
+                self.stage = (Stage.ADAPTING if self.async_mode
+                              else Stage.GENPOLICY)
+                self.stable_step = 0
             elif (prev_stage is Stage.GENPOLICY
                   and self.stable_step > n_gen):
                 self.stage = Stage.STABLE
@@ -89,9 +102,20 @@ class StageMachine:
             self._log(step, why, self.stage)
         return self.stage
 
+    def complete_adapting(self, step: int = -1,
+                          why: str = "adapt-installed") -> Stage:
+        """Async adaptation finished: the runtime installed the worker's
+        (or a parked speculative) result at an iteration boundary."""
+        prev = self.stage
+        self.stage, self.stable_step = Stage.STABLE, 0
+        if prev is not Stage.STABLE:
+            self._log(step, why, self.stage)
+        return self.stage
+
     @property
     def mode(self) -> str:
-        """Profiler mode implied by the stage (§4)."""
+        """Profiler mode implied by the stage (§4).  ADAPTING stays
+        Lightweight — Detailed replays run on the worker, off-thread."""
         return "detailed" if self.stage is Stage.GENPOLICY else "lightweight"
 
     def _log(self, step, why, to):

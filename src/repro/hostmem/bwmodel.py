@@ -20,6 +20,7 @@ platform-specific.  This model measures the actual curve:
 from __future__ import annotations
 
 import math
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -39,16 +40,22 @@ class BandwidthModel:
         # log2-size bucket -> (representative size, ema seconds, n samples)
         self._buckets: Dict[int, Tuple[int, float, int]] = {}
         self._curve_cache: Optional[List[Tuple[int, float]]] = None
+        # observe() runs on the training thread while the adaptation
+        # worker (repro.adapt) prices variants concurrently — bucket
+        # writes and curve reads take the same lock; transfer_time reads
+        # an immutable curve list so interpolation runs unlocked
+        self._lock = threading.Lock()
 
     # ---------------------------------------------------------- sampling
     def observe(self, nbytes: int, seconds: float) -> None:
         if nbytes <= 0 or seconds <= 0:
             return
         b = int(math.log2(nbytes))
-        size, ema, n = self._buckets.get(b, (nbytes, seconds, 0))
-        ema = seconds if n == 0 else (1 - EMA) * ema + EMA * seconds
-        self._buckets[b] = (max(size, nbytes), ema, n + 1)
-        self._curve_cache = None
+        with self._lock:
+            size, ema, n = self._buckets.get(b, (nbytes, seconds, 0))
+            ema = seconds if n == 0 else (1 - EMA) * ema + EMA * seconds
+            self._buckets[b] = (max(size, nbytes), ema, n + 1)
+            self._curve_cache = None
 
     def calibrate(self, sizes: Sequence[int] = CALIBRATION_SIZES, *,
                   iters: int = 3,
@@ -75,10 +82,15 @@ class BandwidthModel:
         return len(self._buckets) >= 2
 
     def _curve(self) -> List[Tuple[int, float]]:
-        if self._curve_cache is None:
-            self._curve_cache = sorted(
-                (size, ema) for size, ema, _ in self._buckets.values())
-        return self._curve_cache
+        # the cached list is built under the lock and never mutated in
+        # place, so readers may keep using a reference that a concurrent
+        # observe() invalidated — they just see the previous curve
+        curve = self._curve_cache
+        if curve is None:
+            with self._lock:
+                curve = self._curve_cache = sorted(
+                    (size, ema) for size, ema, _ in self._buckets.values())
+        return curve
 
     def transfer_time(self, nbytes: int) -> float:
         """Seconds to move ``nbytes`` one way across the host link."""
@@ -110,8 +122,16 @@ class BandwidthModel:
         return [(s, t, s / t / 1e9) for s, t in self._curve()]
 
     def to_dict(self) -> dict:
-        return {"constant_gbps": self.constant_gbps,
-                "samples": [(s, t, n) for s, t, n in self._buckets.values()]}
+        with self._lock:
+            return {"constant_gbps": self.constant_gbps,
+                    "samples": [(s, t, n)
+                                for s, t, n in self._buckets.values()]}
+
+    def snapshot(self) -> "BandwidthModel":
+        """Immutable-by-convention copy for background adaptation
+        (repro.adapt): the worker prices every variant of one search
+        against the same frozen curve instead of chasing the live EMA."""
+        return BandwidthModel.from_dict(self.to_dict())
 
     @classmethod
     def from_dict(cls, d: dict) -> "BandwidthModel":

@@ -412,6 +412,36 @@ class TransferEngine:
             return sum(e.nbytes for k in (SWAP_OUT, SWAP_IN)
                        for e in self._pending[(cls, k)])
 
+    def backlog_snapshot(self) -> Dict[str, dict]:
+        """One consistent per-class view of the live link backlog —
+        what an :class:`~repro.adapt.AdaptSnapshot` freezes so the
+        background variant search prices the contention that existed
+        when drift settled, not whatever the engine is doing later.
+        ``queued_delay`` here is the same estimate :meth:`queued_delay`
+        returns, computed for every class under a single lock hold."""
+        out: Dict[str, dict] = {}
+        with self._lock:
+            est = {c: sum(self._est_seconds(e.nbytes)
+                          for e in self._pending[(c, SWAP_OUT)])
+                   for c in TRAFFIC_CLASSES}
+            heads = {c: (self._est_seconds(self._pending[(c, SWAP_OUT)][0].nbytes)
+                         if self._pending[(c, SWAP_OUT)] else 0.0)
+                     for c in TRAFFIC_CLASSES}
+            for cls in TRAFFIC_CLASSES:
+                pri = PRIORITY[cls]
+                ahead = sum(est[c] for c in TRAFFIC_CLASSES
+                            if PRIORITY[c] <= pri)
+                hol = max((heads[c] for c in TRAFFIC_CLASSES
+                           if PRIORITY[c] > pri), default=0.0)
+                out[cls] = {
+                    "queued_delay": ahead + hol,
+                    "queue_depth": sum(len(self._pending[(cls, k)])
+                                       for k in (SWAP_OUT, SWAP_IN)),
+                    "queued_bytes": sum(e.nbytes for k in (SWAP_OUT, SWAP_IN)
+                                        for e in self._pending[(cls, k)]),
+                }
+        return out
+
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
         tput = lambda b, s: b / s / 1e9 if s > 0 else 0.0   # noqa: E731

@@ -33,6 +33,13 @@ def main():
     ap.add_argument("--policy-store-dir", default="",
                     help="attach the shared adaptation cache (read-only "
                          "visibility: cache warmth is reported in stats)")
+    ap.add_argument("--adapt-mode",
+                    choices=["inline", "async", "speculative"],
+                    default="inline",
+                    help="adaptation placement (repro.adapt): async/"
+                         "speculative enable the background policy-store "
+                         "refresher so a co-located trainer's new policies "
+                         "become visible without a tick-loop stall")
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome trace-event JSON here on exit "
                          "(open in Perfetto / chrome://tracing)")
@@ -69,7 +76,7 @@ def main():
                                   readonly=True)
     srv = Server(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
                  max_active=max_active, hostmem=hostmem,
-                 policystore=policystore)
+                 policystore=policystore, adapt_mode=args.adapt_mode)
     rng = np.random.RandomState(0)
     for _ in range(args.requests):
         srv.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)),
@@ -102,6 +109,11 @@ def main():
                   f"({ks['compression_ratio']:.2f}x)")
     if policystore is not None:
         print(f"policystore: {policystore.stats()}")
+        ad = srv.stats()["adapt"]
+        if ad["mode"] != "inline":
+            print(f"adapt[{ad['mode']}]: "
+                  f"store_refreshes={ad['store_refreshes']} "
+                  f"records_refreshed={ad['store_records_refreshed']}")
     from repro import obs
     if args.metrics_out:
         obs.metrics().write_jsonl(args.metrics_out)

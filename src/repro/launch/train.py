@@ -33,6 +33,15 @@ def main():
                          "GenPolicy for recurring sequences)")
     ap.add_argument("--no-policy-store", action="store_true",
                     help="disable the in-memory policy cache too")
+    ap.add_argument("--adapt-mode",
+                    choices=["inline", "async", "speculative"],
+                    default="inline",
+                    help="adaptation placement (repro.adapt): inline runs "
+                         "the paper's measured GenPolicy iterations; async "
+                         "moves the variant search to a background worker "
+                         "(drift never stalls an iteration); speculative "
+                         "additionally pre-generates policies for "
+                         "predicted-recurring op sequences")
     ap.add_argument("--multihost", action="store_true",
                     help="initialize jax.distributed from env")
     ap.add_argument("--mesh", choices=["none", "single", "multi"],
@@ -57,8 +66,8 @@ def main():
 
     import jax
     import repro.configs as C
-    from repro.common.config import (ChameleonConfig, PolicyStoreConfig,
-                                     TrainConfig)
+    from repro.common.config import (AdaptConfig, ChameleonConfig,
+                                     PolicyStoreConfig, TrainConfig)
     from repro.data.synthetic import SyntheticTokens
     from repro.launch.mesh import make_production_mesh
     from repro.runtime.trainer import Trainer
@@ -73,7 +82,8 @@ def main():
                            hbm_budget_bytes=int(args.budget_gib * 2 ** 30),
                            policystore=PolicyStoreConfig(
                                enabled=not args.no_policy_store,
-                               dir=args.policy_store_dir))
+                               dir=args.policy_store_dir),
+                           adapt=AdaptConfig(mode=args.adapt_mode))
     mesh = None
     if args.mesh != "none":
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
@@ -107,9 +117,16 @@ def main():
                   f"regen={t['regen']} demoted={t['demoted']}; "
                   f"genpolicy_steps={ps['genpolicy_steps_total']}; "
                   f"adaptations={len(ps['adaptations'])}")
+        ad = rep.adapt
+        if ad is not None and ad["mode"] != "inline":
+            print(f"adapt[{ad['mode']}]: jobs={ad['jobs']} "
+                  f"published={ad['published']} installed={ad['installed']} "
+                  f"discarded={ad['discarded']} failed={ad['failed']} "
+                  f"spec_hits={ad['speculative_hits']}")
     finally:
         data.stop()
         if tr is not None:
+            tr.rt.close()
             _export_obs(args, tr.rt)
 
 

@@ -34,6 +34,7 @@ classifier scores *sequences*, matching validates *tensors*.
 from __future__ import annotations
 
 import enum
+import threading
 from dataclasses import dataclass
 from typing import Optional
 
@@ -80,6 +81,9 @@ class DriftClassifier:
         self.cfg = cfg
         self.counters = {t.value: 0 for t in Tier}
         self.counters["demoted"] = 0
+        # classify runs on the repro.adapt worker while the runtime's
+        # inline paths (and stats readers) touch the same counters
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------- tiers
     def classify(self, fp: Fingerprint, store: PolicyStore, *,
@@ -121,9 +125,10 @@ class DriftClassifier:
         WARM_START around the same record.  The original tier's count is
         taken back — it never actually applied — so the per-tier counters
         always sum to the number of adaptations."""
-        self.counters[decision.tier.value] -= 1
-        self.counters["demoted"] += 1
-        self.counters[Tier.WARM_START.value] += 1
+        with self._lock:
+            self.counters[decision.tier.value] -= 1
+            self.counters["demoted"] += 1
+            self.counters[Tier.WARM_START.value] += 1
         obs.audit().event(
             "drift.demote", why=why,
             from_tier=decision.tier.value, to_tier=Tier.WARM_START.value,
@@ -143,8 +148,10 @@ class DriftClassifier:
         return d
 
     def _count(self, d: DriftDecision) -> DriftDecision:
-        self.counters[d.tier.value] += 1
+        with self._lock:
+            self.counters[d.tier.value] += 1
         return d
 
     def stats(self) -> dict:
-        return dict(self.counters)
+        with self._lock:
+            return dict(self.counters)

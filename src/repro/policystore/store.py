@@ -28,18 +28,31 @@ signatures (``lshindex.py``, persisted as ``lsh.index`` next to the
 records and rebuilt when missing, corrupt, or out of sync) shortlists
 probable matches; only when the probe finds nothing reuse-grade does a
 vectorized fallback run — one numpy pass computes a per-record *upper
-bound* on the calibrated similarity (Jaccard + length terms, optimistic
-histogram terms), and exact scoring proceeds in decreasing-bound order,
-stopping as soon as the bound cannot beat the best hit.  The result is
-identical to the exhaustive scan whenever the exhaustive best is below
-the reuse threshold, and reuse-grade otherwise; ``n_sim_evals`` counts
-full similarity evaluations so tests can assert probe work ≪ records.
+bound* on the calibrated similarity, and exact scoring proceeds in
+decreasing-bound order, stopping as soon as the bound cannot beat the
+best hit.  The bound is tight: the operator-histogram and site-byte
+cosines are evaluated exactly as dense matrix products over the bounded
+token/site vocabularies (rows normalized once, rebuilt lazily after
+mutations), so the per-row bound *equals* the blended score up to
+rounding — a true miss scores O(1) records after the vectorized pass
+instead of falling back to O(records) scalar evaluations.  Rows whose
+histogram overflows the vocab cap keep the old optimistic constant (the
+bound must stay an upper bound).  The result is identical to the
+exhaustive scan whenever the exhaustive best is below the reuse
+threshold, and reuse-grade otherwise; ``n_sim_evals`` counts full
+similarity evaluations so tests can assert probe work ≪ records —
+``nearest_exhaustive`` stays as the parity oracle.
+
+The store is thread-safe (one re-entrant lock around record/index/row
+state): the training thread and the repro.adapt background worker both
+read and write it.
 """
 from __future__ import annotations
 
 import collections
 import json
 import os
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -225,6 +238,10 @@ class PolicyStore:
                               int(getattr(cfg, "lsh_bands", 16)))
         self._rows_dirty = True
         self._index_dirty_puts = 0
+        # training thread + adaptation worker (repro.adapt) share the
+        # store; re-entrant because classify->nearest and the runtime's
+        # touch can nest through the same thread's call chain
+        self._lock = threading.RLock()
         if self.dir:
             self._load_dir()
             self._attach_index()
@@ -334,14 +351,15 @@ class PolicyStore:
                     pass
 
     def put(self, rec: PolicyRecord) -> None:
-        self._records[rec.key] = rec
-        self._records.move_to_end(rec.key)
-        self.index.add(rec.key, (rec.prepare_fingerprint.minhash,
-                                 rec.fingerprint.minhash))
-        self._rows_dirty = True
-        self._evict_over_capacity()
-        self._persist(rec)
-        self._persist_index_amortized()
+        with self._lock:
+            self._records[rec.key] = rec
+            self._records.move_to_end(rec.key)
+            self.index.add(rec.key, (rec.prepare_fingerprint.minhash,
+                                     rec.fingerprint.minhash))
+            self._rows_dirty = True
+            self._evict_over_capacity()
+            self._persist(rec)
+            self._persist_index_amortized()
 
     def touch(self, rec: PolicyRecord) -> None:
         """Record a use: bumps LRU recency and the use counter.  The disk
@@ -349,18 +367,59 @@ class PolicyStore:
         mtime) — rewriting the whole record per hit would serialize every
         candidate on every reuse; the ``uses`` counter is informational
         and flushed whenever the record is next ``put``."""
-        rec.uses += 1
-        if rec.key in self._records:
-            self._records.move_to_end(rec.key)
-        if self.dir and not self.readonly:
+        with self._lock:
+            rec.uses += 1
+            if rec.key in self._records:
+                self._records.move_to_end(rec.key)
+            if self.dir and not self.readonly:
+                try:
+                    os.utime(self._path(rec.key), None)
+                except OSError:
+                    self._persist(rec)      # file vanished: restore it
+
+    def refresh(self) -> int:
+        """Pick up records another writer added to the directory since
+        load — a readonly attach in a serving process keeps seeing the
+        trainer's newly cached policies without a restart.  Returns the
+        number of newly loaded records."""
+        if not self.dir:
+            return 0
+        with self._lock:
             try:
-                os.utime(self._path(rec.key), None)
+                names = [n for n in os.listdir(self.dir)
+                         if n.endswith(".json")]
             except OSError:
-                self._persist(rec)          # file vanished: restore it
+                return 0
+            new = 0
+            for name in names:
+                if name[:-5] in self._records:
+                    continue
+                try:
+                    with open(os.path.join(self.dir, name)) as f:
+                        rec = PolicyRecord.from_json(json.load(f))
+                except (OSError, ValueError, KeyError, TypeError,
+                        json.JSONDecodeError):
+                    self.n_corrupt += 1
+                    continue
+                self._records[rec.key] = rec
+                self.index.add(rec.key, (rec.prepare_fingerprint.minhash,
+                                         rec.fingerprint.minhash))
+                self._rows_dirty = True
+                self.n_loaded += 1
+                new += 1
+            if new and not self.readonly:
+                self._evict_over_capacity()
+            return new
 
     # ------------------------------------------------------------ lookup
     def get_exact(self, key: str) -> Optional[PolicyRecord]:
-        return self._records.get(key)
+        with self._lock:
+            return self._records.get(key)
+
+    # the token-histogram vocabulary across all rows is bounded (interned
+    # op tokens), but a pathological store could still blow the dense
+    # matrix up — rows beyond the cap keep the optimistic constant bound
+    _HIST_VOCAB_CAP = 8192
 
     # ---- flat row views for the vectorized fallback (2 rows per record:
     # prepare + iteration fingerprint), rebuilt lazily after mutations
@@ -373,9 +432,11 @@ class PolicyStore:
         lens: List[int] = []
         has_site: List[bool] = []
         sig_ok: List[bool] = []
+        fps: List[Fingerprint] = []
         for key, rec in self._records.items():
             for f in (rec.prepare_fingerprint, rec.fingerprint):
                 keys.append(key)
+                fps.append(f)
                 lens.append(int(f.length))
                 has_site.append(bool(f.site_bytes))
                 if f.minhash.size == w:
@@ -390,12 +451,75 @@ class PolicyStore:
         self._row_lens = np.asarray(lens, np.float64)
         self._row_site = np.asarray(has_site, bool)
         self._row_ok = np.asarray(sig_ok, bool)
+        self._build_cosine_rows(fps)
         self._rows_dirty = False
 
+    def _build_cosine_rows(self, fps: List[Fingerprint]) -> None:
+        """Dense unit-normalized histogram/site matrices over the bounded
+        vocabularies, so ``_upper_bounds`` evaluates the cosine terms of
+        the calibrated similarity *exactly* (a row's support is always a
+        subset of the vocab, so the dot over mapped query entries is the
+        true dot).  Rows whose histogram would overflow the vocab cap are
+        flagged; their bound falls back to the optimistic constant."""
+        n = len(fps)
+        hist_vocab: Dict[int, int] = {}
+        site_vocab: Dict[str, int] = {}
+        hist_full = np.ones(n, bool)        # row fully inside the vocab?
+        for i, f in enumerate(fps):
+            if len(hist_vocab) + len(f.histogram) <= self._HIST_VOCAB_CAP:
+                for t in f.histogram:
+                    if t not in hist_vocab:
+                        hist_vocab[t] = len(hist_vocab)
+            if not all(t in hist_vocab for t in f.histogram):
+                hist_full[i] = False
+            for s in f.site_bytes:
+                if s not in site_vocab:
+                    site_vocab[s] = len(site_vocab)
+        hmat = np.zeros((n, max(len(hist_vocab), 1)), np.float64)
+        smat = np.zeros((n, max(len(site_vocab), 1)), np.float64)
+        hist_empty = np.zeros(n, bool)
+        cand = np.zeros(n, np.float64)
+        for i, f in enumerate(fps):
+            hist_empty[i] = not f.histogram
+            cand[i] = float(f.cand_bytes)
+            if hist_full[i]:
+                for t, c in f.histogram.items():
+                    hmat[i, hist_vocab[t]] = c
+            for s, b in f.site_bytes.items():
+                smat[i, site_vocab[s]] = b
+        for mat in (hmat, smat):
+            norms = np.linalg.norm(mat, axis=1)
+            nz = norms > 0
+            mat[nz] /= norms[nz, None]
+        self._hist_vocab, self._site_vocab = hist_vocab, site_vocab
+        self._row_hist, self._row_svec = hmat, smat
+        self._row_hist_full, self._row_hist_empty = hist_full, hist_empty
+        self._row_cand = cand
+
+    def _query_cos(self, q: Dict, vocab: Dict, mat: np.ndarray,
+                   row_empty: np.ndarray) -> np.ndarray:
+        """Exact cosine of ``q`` against every (unit-normalized) row.
+        Out-of-vocab query entries contribute to the query norm only —
+        rows carry no mass there, so the dot is still exact."""
+        if not q:
+            return np.where(row_empty, 1.0, 0.0)
+        qv = np.zeros(mat.shape[1], np.float64)
+        qn2 = 0.0
+        for k, v in q.items():
+            qn2 += float(v) * float(v)
+            j = vocab.get(k)
+            if j is not None:
+                qv[j] = v
+        dots = mat @ qv
+        cos = dots / max(np.sqrt(qn2), 1e-300)
+        return np.where(row_empty, 0.0, cos)
+
     def _upper_bounds(self, fp: Fingerprint) -> np.ndarray:
-        """Per-row upper bound on the calibrated similarity: exact Jaccard
-        estimate and length ratio, histogram/site terms assumed perfect.
-        Rows the bound cannot cover (signature width mismatch) get 1.0."""
+        """Per-row upper bound on the calibrated similarity.  With the
+        dense cosine rows the bound equals the blended score (every term
+        exact) for vocab-covered rows, so a true miss prunes after O(1)
+        exact evaluations; overflow rows keep the optimistic constant and
+        width-mismatched rows get 1.0 (never prune what we cannot score)."""
         n = len(self._row_keys)
         if fp.minhash.size == self.index.n_perms and n:
             jac = (self._row_sigs == fp.minhash[None, :]).mean(axis=1)
@@ -408,9 +532,31 @@ class PolicyStore:
                           np.where((lens <= 0) | (fl <= 0), 0.0,
                                    np.minimum(lens, fl)
                                    / np.maximum(np.maximum(lens, fl), 1e-12)))
+        cos = self._query_cos(fp.histogram, self._hist_vocab,
+                              self._row_hist, self._row_hist_empty)
+        use_prof = self._row_site & bool(fp.site_bytes)
+        sc_token = 0.45 * jac + 0.30 * cos + 0.25 * lr
+        sc = sc_token
+        if use_prof.any():
+            site_cos = self._query_cos(
+                fp.site_bytes, self._site_vocab, self._row_svec,
+                ~self._row_site)
+            qc = float(fp.cand_bytes)
+            rc = self._row_cand
+            with np.errstate(divide="ignore", invalid="ignore"):
+                bytes_r = np.where((rc <= 0) & (qc <= 0), 1.0,
+                                   np.where((rc <= 0) | (qc <= 0), 0.0,
+                                            np.minimum(rc, qc)
+                                            / np.maximum(np.maximum(rc, qc),
+                                                         1e-12)))
+            sc_prof = (0.40 * jac + 0.20 * cos + 0.20 * lr
+                       + 0.10 * site_cos + 0.10 * bytes_r)
+            sc = np.where(use_prof, sc_prof, sc_token)
+        # overflow rows: histogram cosine unknown -> optimistic constant
         ub_token = 0.45 * jac + 0.25 * lr + 0.30
         ub_prof = 0.40 * jac + 0.20 * lr + 0.40
-        ub = np.where(self._row_site & bool(fp.site_bytes), ub_prof, ub_token)
+        ub_loose = np.where(use_prof, ub_prof, ub_token)
+        ub = np.where(self._row_hist_full, sc, ub_loose)
         ub = np.where(self._row_ok, ub, 1.0)
         return ub + 1e-9                    # absorb float rounding slack
 
@@ -425,6 +571,11 @@ class PolicyStore:
         and if a reuse-grade match surfaces the scan stops there (probe
         work ≪ records).  Otherwise the vectorized bounded fallback
         recovers the exact exhaustive-scan result."""
+        with self._lock:
+            return self._nearest_locked(fp)
+
+    def _nearest_locked(
+            self, fp: Fingerprint) -> Tuple[Optional[PolicyRecord], float]:
         self.n_lookups += 1
         hit = self._records.get(fp.exact)   # O(1) fast path (keys are
         if hit is not None:                 # prepare-fingerprint hashes)
@@ -479,7 +630,9 @@ class PolicyStore:
         (tests/benchmarks).  Does not touch hit counters."""
         best: Optional[PolicyRecord] = None
         best_sim = 0.0
-        for rec in self._records.values():
+        with self._lock:
+            recs = list(self._records.values())
+        for rec in recs:
             sim = max(similarity(fp, rec.prepare_fingerprint),
                       similarity(fp, rec.fingerprint))
             if sim > best_sim or best is None:
@@ -488,23 +641,26 @@ class PolicyStore:
 
     # ------------------------------------------------------------- misc
     def __len__(self) -> int:
-        return len(self._records)
+        with self._lock:
+            return len(self._records)
 
     def records(self) -> List[PolicyRecord]:
-        return list(self._records.values())
+        with self._lock:
+            return list(self._records.values())
 
     def stats(self) -> dict:
-        return {
-            "records": len(self._records),
-            "dir": self.dir or "",
-            "lookups": self.n_lookups,
-            "exact_hits": self.n_exact_hits,
-            "sim_hits": self.n_sim_hits,
-            "misses": self.n_misses,
-            "evictions": self.n_evictions,
-            "loaded": self.n_loaded,
-            "corrupt_skipped": self.n_corrupt,
-            "sim_evals": self.n_sim_evals,
-            "index_rebuilds": self.n_index_rebuilds,
-            "index": self.index.stats(),
-        }
+        with self._lock:
+            return {
+                "records": len(self._records),
+                "dir": self.dir or "",
+                "lookups": self.n_lookups,
+                "exact_hits": self.n_exact_hits,
+                "sim_hits": self.n_sim_hits,
+                "misses": self.n_misses,
+                "evictions": self.n_evictions,
+                "loaded": self.n_loaded,
+                "corrupt_skipped": self.n_corrupt,
+                "sim_evals": self.n_sim_evals,
+                "index_rebuilds": self.n_index_rebuilds,
+                "index": self.index.stats(),
+            }

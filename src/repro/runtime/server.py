@@ -15,6 +15,7 @@ a request decodes the same tokens whether or not it was ever parked.
 from __future__ import annotations
 
 import collections
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -48,7 +49,8 @@ class Server:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 512, memory=None,
                  max_active: Optional[int] = None, hostmem=None,
-                 rotate_every: int = 1, policystore=None):
+                 rotate_every: int = 1, policystore=None,
+                 adapt_mode: str = "inline"):
         assert cfg.family in ("dense", "moe", "ssm"), \
             "server prefill path covers dense/moe/ssm; others serve via decode-only"
         self.cfg, self.params = cfg, params
@@ -81,8 +83,17 @@ class Server:
         # fewer spill round trips per generated token.
         self.rotate_every = max(rotate_every, 1)
         # shared adaptation cache (repro.policystore): the serving process
-        # reports cache warmth alongside its own stats
+        # reports cache warmth alongside its own stats.  With adapt_mode
+        # async/speculative (repro.adapt), a background one-shot thread
+        # periodically re-scans the store directory so records a
+        # concurrently *training* process writes become visible without a
+        # restart — and without ever stalling a decode tick on disk I/O.
         self.policystore = policystore
+        self.adapt_mode = adapt_mode
+        self._refresh_thread: Optional[threading.Thread] = None
+        self._refresh_every_ticks = 256
+        self.n_store_refreshes = 0
+        self.n_store_refreshed = 0
         # tick-level batching log: (resident slots at decode, wall seconds,
         # tokens emitted) per tick — the serving bench derives throughput,
         # latency percentiles, and slot occupancy from this.  Bounded: a
@@ -228,8 +239,26 @@ class Server:
         self.ticks += 1
         self._admit()
         self._rotate()
+        if self.ticks % self._refresh_every_ticks == 0:
+            self._refresh_store()
         self.tick_log.append((n_resident, time.perf_counter() - t0, len(out)))
         return out
+
+    def _refresh_store(self) -> None:
+        """Kick one background store re-scan (never blocks the tick; a
+        still-running previous scan is left to finish)."""
+        if self.adapt_mode == "inline" or self.policystore is None:
+            return
+        if self._refresh_thread is not None and self._refresh_thread.is_alive():
+            return
+
+        def _scan():
+            self.n_store_refreshed += self.policystore.refresh()
+            self.n_store_refreshes += 1
+
+        self._refresh_thread = threading.Thread(
+            target=_scan, name="store-refresh", daemon=True)
+        self._refresh_thread.start()
 
     def run_until_done(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
         for _ in range(max_ticks):
@@ -297,4 +326,7 @@ class Server:
             "latency": self.latency_stats(),
             "policystore": (self.policystore.stats()
                             if self.policystore is not None else None),
+            "adapt": {"mode": self.adapt_mode,
+                      "store_refreshes": self.n_store_refreshes,
+                      "store_records_refreshed": self.n_store_refreshed},
         }

@@ -12,6 +12,7 @@ a different mesh — elastic restart), straggler detection on step times.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -22,7 +23,8 @@ import numpy as np
 
 from repro import obs
 from repro.checkpointing.manager import CheckpointManager
-from repro.common.config import (ChameleonConfig, ModelConfig, TrainConfig)
+from repro.common.config import (AdaptConfig, ChameleonConfig, ModelConfig,
+                                 TrainConfig)
 from repro.core.runtime import ChameleonRuntime
 from repro.data.synthetic import SyntheticTokens
 from repro.distributed import sharding as shd
@@ -38,6 +40,10 @@ from repro.runtime.straggler import StragglerDetector
 class TrainReport:
     losses: List[float] = field(default_factory=list)
     times: List[float] = field(default_factory=list)
+    # full critical-path latency per step: ``times`` plus the
+    # ``end_iteration`` bookkeeping/adaptation that runs before the next
+    # dispatch — what a drift stall actually costs wall-clock
+    wall_times: List[float] = field(default_factory=list)
     skipped_steps: List[int] = field(default_factory=list)
     eval_losses: Dict[int, float] = field(default_factory=dict)
     stages: List[str] = field(default_factory=list)
@@ -46,6 +52,9 @@ class TrainReport:
     # repro.policystore: per-tier hit counters + adaptation latencies
     # (None when the runtime has no store attached)
     policystore: Optional[dict] = None
+    # repro.adapt: service counters (jobs/published/discarded/failed/
+    # installed/speculative) — populated by train() for every mode
+    adapt: Optional[dict] = None
 
     @property
     def genpolicy_steps(self) -> int:
@@ -58,9 +67,17 @@ class Trainer:
                  mesh=None, data: Optional[SyntheticTokens] = None,
                  eval_data: Optional[SyntheticTokens] = None,
                  metrics_out: Optional[str] = None,
-                 metrics_every: int = 25):
+                 metrics_every: int = 25,
+                 adapt_mode: Optional[str] = None):
         self.cfg, self.tcfg = cfg, tcfg
         self.cham = cham or ChameleonConfig(enabled=False)
+        if adapt_mode is not None and adapt_mode != self.cham.adapt.mode:
+            # placement override (--adapt-mode): inline keeps the paper's
+            # measured GenPolicy iterations; async/speculative move the
+            # variant search onto the repro.adapt background worker
+            self.cham = dataclasses.replace(
+                self.cham,
+                adapt=dataclasses.replace(self.cham.adapt, mode=adapt_mode))
         self.mesh = mesh
         self.api = get_api(cfg)
         self.data = data or SyntheticTokens(cfg.vocab_size, 128, 8,
@@ -105,6 +122,7 @@ class Trainer:
             "profiling_overhead_s": self.rt.profiling_overhead_s,
             "adaptation_overhead_s": self.rt.adaptation_overhead_s,
             "adaptations": len(self.rt.adaptations),
+            "adapt": self.rt.service.stats(),
         }
 
     # ------------------------------------------------------------- utils
@@ -169,6 +187,7 @@ class Trainer:
                 raise
         self.ckpt.wait()
         self.report.policystore = self.rt.policystore_stats()
+        self.report.adapt = self.rt.service.stats()
         return self.report
 
     def _one_step(self, batch, fault_hook=None):
@@ -210,6 +229,7 @@ class Trainer:
         self.straggler.observe(self.step, dt)
         self.report.losses.append(float(loss))
         self.report.times.append(dt)
+        self.report.wall_times.append(time.perf_counter() - t0)
         self.report.stages.append(stage.value)
         self.step += 1
         # step is incremented BEFORE any failure can be raised for this

@@ -1,0 +1,365 @@
+"""repro.adapt service tests (ISSUE 7).
+
+Five families:
+
+  * **swap-in protocol stress** — hundreds of iteration boundaries racing
+    enqueue/publish/discard on the worker against the install poll on the
+    "training" thread, with injected drift: no torn install (every polled
+    result is internally consistent and matches the live stream), the
+    generation counter is monotone, and the job ledger balances exactly
+    (jobs == installed + discarded once drained and flushed);
+  * **async ≡ inline equivalence** — ``AdaptationPipeline.run`` is
+    deterministic in the snapshot, so the worker's published result must
+    equal a synchronous replay of the same snapshot bit-for-bit in
+    everything that matters (knob, kind, policy fingerprint, swap size);
+  * **crash hygiene** — a raising pipeline must not kill training: the
+    worker publishes the conservative fallback, audits
+    ``adaptation.failed``, stays alive for the next job, and ``submit``
+    re-arms a dead thread;
+  * **speculative pre-generation** — a recurring A/B phase cycle parks
+    the successor's policy so the next switch installs with zero
+    non-speculative jobs, and the chain keeps hitting from then on;
+  * **satellites** — MRL slice-window parity against the O(n) masked
+    reference (ISSUE 7 satellite), and the vectorized ``nearest`` miss
+    path pruning to a handful of similarity evaluations while staying
+    exhaustive-scan exact.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import obs
+from repro.adapt import (VARIANT_KNOBS, AdaptResult, AdaptSnapshot,
+                         AdaptationPipeline, AdaptationService)
+from repro.common.config import ChameleonConfig, PolicyStoreConfig
+from repro.core.executor import AppliedPolicy, Executor
+from repro.core.mrl import MRL
+from repro.policystore import PolicyStore, fingerprint_tokens
+
+from tests.test_monitor_hotpath import _record
+from tests.test_simulator_policy import synth_profile
+
+
+# ------------------------------------------------------------------ helpers
+class _EchoPipeline:
+    """Pipeline stand-in: returns a result that names the snapshot it was
+    computed from (so a torn/mixed install is detectable), after an
+    optional delay to widen the race window."""
+
+    def __init__(self, delay=0.0, jitter=0.0, seed=0):
+        self.executor = Executor(ChameleonConfig())
+        self.delay, self.jitter = delay, jitter
+        self._rng = np.random.RandomState(seed)   # worker thread only
+        self.fail = False
+        self.n_runs = 0
+
+    def run(self, snap: AdaptSnapshot, *, pace_s: float = 0.0
+            ) -> AdaptResult:
+        self.n_runs += 1
+        if self.delay or self.jitter:
+            time.sleep(self.delay + self.jitter * float(self._rng.rand()))
+        if self.fail:
+            raise RuntimeError("injected pipeline crash")
+        applied = AppliedPolicy(None, set(), set(), set(),
+                                f"policy-for-{snap.iter_exact}")
+        return AdaptResult(applied=applied, swap=None, knob=1.0,
+                           kind="echo", tier="regen",
+                           predicted_t=snap.t_iter, profile=None,
+                           iter_exact=snap.iter_exact, step=snap.step)
+
+
+def _snap(fp: str, step: int = 0) -> AdaptSnapshot:
+    return AdaptSnapshot(t_iter=0.01, budget=1 << 30, iter_exact=fp,
+                         step=step, profile=None)
+
+
+# ------------------------------------------------- swap-in protocol stress
+def test_stress_no_torn_install_monotone_epochs():
+    """>=200 boundaries of drift/submit/poll racing the worker.  Every
+    polled result must be current (epoch == live epoch, fingerprint ==
+    live stream) and self-consistent (its policy names its own stream);
+    epochs never move backwards; the job ledger balances."""
+    pipe = _EchoPipeline(delay=0.0005, jitter=0.002)
+    svc = AdaptationService(pipe, "async")
+    rng = np.random.RandomState(1234)
+    live = None
+    installs = 0
+    last_epoch = svc.epoch
+    try:
+        for i in range(300):
+            assert svc.epoch >= last_epoch          # monotone generations
+            last_epoch = svc.epoch
+            r = rng.rand()
+            if live is None or r < 0.30:
+                # injected drift: a brand-new stream supersedes in-flight
+                live = f"fp-{i}"
+                svc.invalidate("injected-drift")
+                svc.submit(_snap(live, step=i))
+            elif r < 0.45:
+                # drift the runtime re-submits without an epoch bump
+                # (same settled phase, refreshed snapshot): older same-
+                # epoch results must be rejected by the fingerprint check
+                live = f"fp-{i}"
+                svc.submit(_snap(live, step=i))
+            time.sleep(float(rng.rand()) * 0.001)
+            res = svc.poll()                        # iteration boundary
+            if res is not None:
+                installs += 1
+                assert res.epoch == svc.epoch       # never a stale epoch
+                assert res.iter_exact == live       # never a stale stream
+                # internal consistency: the installed policy was computed
+                # from the snapshot of the stream it claims (torn install)
+                assert res.applied.fingerprint == f"policy-for-{live}"
+        assert svc.drain(timeout=30.0)
+        # flush: whatever is still parked in the mailbox is either
+        # installable (count it) or stale (service discards it)
+        res = svc.poll()
+        if res is not None:
+            installs += 1
+        svc.invalidate("final-flush")
+        assert installs == svc.n_installed
+        assert installs > 0                         # the race wasn't vacuous
+        assert svc.n_discarded > 0                  # drift really superseded
+        # ledger: every job ends exactly once — run and installed, or
+        # discarded (stale while queued, superseded in the mailbox, stale
+        # or foreign-stream at the poll) — nothing leaks
+        assert svc.n_jobs == svc.n_installed + svc.n_discarded
+    finally:
+        svc.close()
+
+
+def test_poll_rejects_stale_epoch_and_foreign_fingerprint():
+    """Deterministic unit coverage of both discard reasons the stress
+    test exercises probabilistically."""
+    pipe = _EchoPipeline()
+    svc = AdaptationService(pipe, "async")
+    try:
+        svc.submit(_snap("A", step=1))
+        assert svc.drain()
+        svc.invalidate("drift")                     # supersedes A's result
+        assert svc.poll() is None
+        assert svc.n_discarded == 1
+
+        svc.submit(_snap("B", step=2))
+        assert svc.drain()
+        svc.submit(_snap("C", step=3))              # same epoch, new stream
+        deadline = time.monotonic() + 5.0
+        while svc.poll() is None:                   # B (stale stream) is
+            assert time.monotonic() < deadline      # discarded; C installs
+            time.sleep(0.001)
+        assert svc.n_installed == 1
+        assert svc.n_discarded >= 2                 # A (epoch) + B (stream)
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------- async ≡ inline equivalence
+def test_worker_result_equals_synchronous_replay():
+    """The worker publishes exactly what a synchronous run of the same
+    snapshot computes — the equivalence that makes async installs safe."""
+    cfg = ChameleonConfig(enabled=True)
+    prof = synth_profile(n_layers=8, ops_per_layer=10, res_bytes=1 << 20)
+    budget = 3 << 20                                # force a swap policy
+    pipe = AdaptationPipeline(cfg, Executor(cfg))
+    inline = pipe.run(AdaptSnapshot(profile=prof, t_iter=1.0, budget=budget,
+                                    iter_exact="stream", step=7))
+    assert inline.kind == "genpolicy" and inline.swap is not None
+    assert inline.n_variants == len(VARIANT_KNOBS)
+
+    svc = AdaptationService(pipe, "async")
+    try:
+        svc.submit(AdaptSnapshot(profile=prof, t_iter=1.0, budget=budget,
+                                 iter_exact="stream", step=7))
+        assert svc.drain()
+        res = svc.poll()
+    finally:
+        svc.close()
+    assert res is not None
+    assert res.knob == inline.knob
+    assert res.kind == inline.kind
+    assert res.predicted_t == pytest.approx(inline.predicted_t)
+    assert res.applied.fingerprint == inline.applied.fingerprint
+    assert res.applied.offload == inline.applied.offload
+    assert len(res.swap.entries) == len(inline.swap.entries)
+    assert ([e.uid for e in res.swap.entries]
+            == [e.uid for e in inline.swap.entries])
+
+
+# --------------------------------------------------------- crash hygiene
+def test_worker_crash_publishes_conservative_and_stays_alive():
+    pipe = _EchoPipeline()
+    pipe.fail = True
+    svc = AdaptationService(pipe, "async")
+    try:
+        svc.submit(_snap("A", step=1))
+        assert svc.drain()
+        assert svc.n_failed == 1
+        assert svc.stats()["worker_alive"]          # the loop survived
+        res = svc.poll()
+        assert res is not None
+        assert res.kind == "conservative-fallback" and res.tier == "failed"
+        assert res.applied.offload                  # offload-all fallback
+        assert obs.audit().tail(5, kind="adaptation.failed")
+
+        # recovery: the very next job publishes normally
+        pipe.fail = False
+        svc.invalidate("retry")
+        svc.submit(_snap("B", step=2))
+        assert svc.drain()
+        res = svc.poll()
+        assert res is not None and res.kind == "echo"
+        assert res.iter_exact == "B"
+    finally:
+        svc.close()
+
+
+def test_submit_rearms_dead_worker():
+    pipe = _EchoPipeline()
+    svc = AdaptationService(pipe, "async")
+    svc.submit(_snap("A", step=1))
+    assert svc.drain()
+    svc.close()                                     # worker thread exits
+    assert not svc.stats()["worker_alive"]
+    svc.invalidate("restart")
+    svc.submit(_snap("B", step=2))                  # re-arms the thread
+    try:
+        assert svc.stats()["worker_alive"]
+        assert svc.drain()
+        res = svc.poll()
+        assert res is not None and res.iter_exact == "B"
+    finally:
+        svc.close()
+
+
+# --------------------------------------------------- speculative chaining
+def test_speculative_recurring_cycle_parks_and_chains():
+    """A/B/A/B phase cycle: after one full observed period the successor
+    policy is parked before its phase arrives, and every later switch is
+    a speculative hit with zero new non-speculative jobs."""
+    pipe = _EchoPipeline()
+    svc = AdaptationService(pipe, "speculative")
+
+    def boundary(fp, step):
+        """What the runtime does when a settled phase enters ADAPTING."""
+        svc.invalidate("phase-switch")
+        hit = svc.take_speculative(fp)
+        if hit is not None:
+            svc.note_adapted(fp)
+            assert svc.drain()                      # let chained spec land
+            return hit, True
+        svc.submit(_snap(fp, step=step))
+        assert svc.drain()
+        return svc.poll(), False
+
+    try:
+        seq = ["A", "B", "A", "B", "A", "B"]
+        hits = []
+        for step, fp in enumerate(seq):
+            res, was_spec = boundary(fp, step)
+            assert res is not None
+            assert res.iter_exact == fp             # right phase's policy
+            assert res.applied.fingerprint == f"policy-for-{fp}"
+            hits.append(was_spec)
+        # cycle 1 (A, B) and the first re-visit of A run the worker; the
+        # chain is primed after A->B->A is observed, so everything from
+        # the 4th switch on is a parked pre-generated policy
+        assert hits[:3] == [False, False, False]
+        assert all(hits[3:])
+        assert svc.n_spec_hits == len(seq) - 3
+        non_spec_jobs = svc.n_jobs - svc.n_spec_jobs
+        assert non_spec_jobs == 3                   # nothing inline after
+    finally:
+        svc.close()
+
+
+def test_speculative_lru_bounds():
+    """Parked results and retained snapshots stay LRU-bounded."""
+    pipe = _EchoPipeline()
+    svc = AdaptationService(pipe, "speculative", max_parked=2,
+                            max_snapshots=3)
+    try:
+        for i in range(6):
+            svc.submit(_snap(f"fp-{i}", step=i))
+        assert svc.drain()
+        st_ = svc.stats()
+        assert st_["snapshots"] <= 3
+        assert st_["parked"] <= 2
+    finally:
+        svc.close()
+
+
+# ----------------------------------------------------- satellite: MRL parity
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_mrl_window_parity_vs_masked_reference(seed):
+    """covered_count/decrement via the sorted-ops searchsorted window must
+    match the O(n) boolean-mask reference on arbitrary [birth, death)
+    queries, including empty, inverted, and out-of-range windows."""
+    r = np.random.RandomState(seed)
+    ops = np.unique(r.randint(0, 200, size=r.randint(1, 64)))
+    req = r.randint(-5, 1 << 20, size=ops.size).astype(np.int64)
+    mrl = MRL(ops.copy(), req.copy())
+    ref = req.copy()
+    for _ in range(12):
+        birth = int(r.randint(-10, 220))
+        death = int(r.randint(-10, 220))
+        mask = (ops >= birth) & (ops < death)
+        assert (mrl.covered_count(birth, death)
+                == int(np.count_nonzero(ref[mask] > 0)))
+        nbytes = int(r.randint(0, 1 << 16))
+        mrl.decrement(birth, death, nbytes)
+        ref[mask] -= nbytes
+        np.testing.assert_array_equal(mrl.required, ref)
+    assert mrl.is_empty() == bool(np.all(ref <= 0))
+    assert mrl.max_required() == int(ref.max(initial=0))
+
+
+# ------------------------------------- satellite: nearest() miss-path prune
+def test_nearest_true_miss_prunes_and_matches_exhaustive():
+    """A query far from every record must return the exact exhaustive-scan
+    answer after only a handful of similarity evaluations — the dense
+    cosine rows make the upper bound tight, so the sorted-bound scan
+    stops almost immediately."""
+    rng = np.random.RandomState(3)
+    store = PolicyStore(PolicyStoreConfig(max_records=512))
+    for i in range(200):
+        t = rng.randint(1, 40, size=250 + i % 9).astype(np.int32)
+        store.put(_record(fingerprint_tokens(t, cache=False)))
+    # disjoint token range + very different length: a true miss
+    q = fingerprint_tokens(np.arange(500, dtype=np.int32) % 11 + 300,
+                           cache=False)
+    before = store.n_sim_evals
+    rec, sim = store.nearest(q)
+    evals = store.n_sim_evals - before
+    ex_rec, ex_sim = store.nearest_exhaustive(q)
+    assert sim == pytest.approx(ex_sim, abs=1e-9)   # parity with the oracle
+    assert sim < store.cfg.warm_threshold           # really a miss
+    assert evals <= 40                              # pruned: 200 records /
+    #                         400 scoreable rows, only near-tied bounds score
+
+
+def test_nearest_prune_never_changes_the_answer():
+    """Randomized parity sweep: pruned nearest == exhaustive for queries
+    across the hit/miss spectrum."""
+    rng = np.random.RandomState(11)
+    store = PolicyStore(PolicyStoreConfig(max_records=512))
+    streams = []
+    for i in range(80):
+        t = rng.randint(1, 30, size=200 + (i % 5) * 17).astype(np.int32)
+        streams.append(t)
+        store.put(_record(fingerprint_tokens(t, cache=False)))
+    for i in range(24):
+        if i % 3 == 0:                              # near-recurrence
+            base = streams[rng.randint(len(streams))]
+            t = np.concatenate([base, base[: rng.randint(0, 9)]])
+        elif i % 3 == 1:                            # mid-distance
+            t = rng.randint(1, 60, size=rng.randint(150, 400))
+        else:                                       # far miss
+            t = rng.randint(100 + i, 140 + i, size=rng.randint(50, 600))
+        q = fingerprint_tokens(t.astype(np.int32), cache=False)
+        rec, sim = store.nearest(q)
+        ex_rec, ex_sim = store.nearest_exhaustive(q)
+        assert sim == pytest.approx(ex_sim, abs=1e-9)
