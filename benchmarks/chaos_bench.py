@@ -1,0 +1,189 @@
+"""Chaos drills for the swap path (ISSUE 8) — the §6.3 "training never
+crashes" gate, run as a benchmark so the evidence carries numbers.
+
+Each scenario pairs a fault-free reference run with an identically-seeded
+chaos run on reduced llama2 (HBM budget squeezed so policy swaps carry
+real engine traffic) and asserts three things:
+
+  * **no crash** — the chaos run completes every step with an empty
+    failure list, whatever the armed ``FaultPlan`` throws at it;
+  * **bit-exact loss** — recovery is by retry / retain-in-HBM / sync
+    fallback, never by dropping or re-deriving tensor data, so the loss
+    trajectory matches the reference float-for-float;
+  * **bounded T_iter inflation** — degradation trades bandwidth for
+    safety, not throughput collapse: the chaos run's median step time
+    stays within ``INFLATION_CAP``x the reference median.
+
+The ``engine-window`` scenario additionally asserts the degradation
+ladder *descended and recovered* (visible in the audit log), i.e. the
+health FSM both reacted to the fault window and probed its way back to
+the full rung after it closed.
+
+CLI:
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench --fast       # CI gate
+    PYTHONPATH=src python -m benchmarks.chaos_bench \
+        --audit-out /tmp/chaos_audit.jsonl                       # nightly
+
+``--fast`` runs the single highest-signal scenario at reduced length
+(~1 min CPU); the full matrix adds seeded everywhere-chaos and the
+store/checkpoint fault family.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import statistics
+import tempfile
+from typing import List, Optional, Tuple
+
+Row = Tuple[str, float, str]
+
+# generous by design: reduced-config step times are sub-ms, so scheduler
+# noise dominates — the cap only exists to catch pathological stalls
+# (e.g. a retry storm serializing every iteration)
+INFLATION_CAP = 5.0
+
+
+def _train(steps: int, seed: int, plan=None, budget: int = 12 << 20,
+           checkpoint_every: int = 0, persist_store: bool = False):
+    """One reduced-llama2 run; returns (report, trainer-stats dict)."""
+    import os
+
+    import repro.configs as C
+    from repro import faults
+    from repro.common.config import (ChameleonConfig, PolicyStoreConfig,
+                                     TrainConfig)
+    from repro.data.synthetic import SyntheticTokens
+    from repro.runtime.trainer import Trainer
+
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos_bench_")
+    cfg = C.get_reduced("llama2_paper")
+    tcfg = TrainConfig(steps=steps, checkpoint_every=checkpoint_every,
+                       checkpoint_dir=ckpt_dir, eval_every=0,
+                       warmup_steps=2, learning_rate=1e-3, seed=seed)
+    data = SyntheticTokens(cfg.vocab_size, 64, 4, seed=seed)
+    ps = PolicyStoreConfig(dir=os.path.join(ckpt_dir, "policies")
+                           if persist_store else "")
+    tr = Trainer(cfg, tcfg,
+                 ChameleonConfig(enabled=True, hbm_budget_bytes=budget,
+                                 policystore=ps),
+                 data=data)
+    try:
+        if plan is not None:
+            faults.arm(plan)
+        rep = tr.train(steps)
+        eng = tr.rt.hostmem.engine
+        lad = tr.rt.ladder
+        stats = {
+            "fired": plan.total_fired() if plan is not None else 0,
+            "retries": eng.n_retries,
+            "failed_out": eng.n_failed_out,
+            "hbm_fallback_in": eng.n_hbm_fallback_in,
+            "sync_fallback_in": eng.n_sync_fallback_in,
+            "worst_health": eng.health.worst(),
+            "descents": lad.n_descents if lad else 0,
+            "ascents": lad.n_ascents if lad else 0,
+            "rung": lad.name if lad else "full",
+            "live_blocks": eng.pool.live_blocks,
+        }
+        eng.pool.check()
+        return rep, stats
+    finally:
+        faults.disarm()
+        tr.rt.close()
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+def _compare(name: str, steps: int, seed: int, plan,
+             require_ladder: bool = False, **train_kw) -> Row:
+    ref, _ = _train(steps, seed, **train_kw)
+    rep, st = _train(steps, seed, plan=plan, **train_kw)
+
+    assert not rep.failures, f"{name}: chaos run crashed: {rep.failures}"
+    assert st["fired"] > 0, f"{name}: fault plan never fired"
+    n_diff = sum(1 for a, b in zip(ref.losses, rep.losses) if a != b)
+    assert len(rep.losses) == len(ref.losses) and n_diff == 0, \
+        f"{name}: loss diverged under faults (n_diff={n_diff})"
+    assert st["live_blocks"] == 0, f"{name}: leaked staging slabs"
+
+    t_ref = statistics.median(ref.wall_times)
+    t_chaos = statistics.median(rep.wall_times)
+    inflation = t_chaos / t_ref if t_ref > 0 else 1.0
+    assert inflation <= INFLATION_CAP, \
+        f"{name}: T_iter inflated {inflation:.2f}x (cap {INFLATION_CAP}x)"
+
+    if require_ladder:
+        assert st["descents"] >= 1, f"{name}: ladder never descended"
+        assert st["ascents"] >= 1, \
+            f"{name}: ladder never recovered (rung={st['rung']})"
+        assert st["worst_health"] == "healthy", \
+            f"{name}: health stuck at {st['worst_health']}"
+
+    derived = (f"bit_exact=True fired={st['fired']} "
+               f"retries={st['retries']} retained={st['failed_out']} "
+               f"descents={st['descents']} ascents={st['ascents']} "
+               f"inflation={inflation:.2f}x")
+    return (f"chaos.{name}", t_chaos, derived)
+
+
+def _scenarios(fast: bool, seed: int):
+    from repro.faults import FaultPlan, FaultSpec
+    # recovery needs post-window headroom: probes fire every 8 iterations
+    # and each ascent holds 2, so climbing no_swap -> full takes ~25 steps
+    steps = 48 if fast else 60
+    win = dict(start=steps // 4, stop=steps // 4 + 10)
+    yield ("engine_window", steps,
+           FaultPlan([FaultSpec("engine.transfer_error", prob=1.0, **win)],
+                     seed=seed),
+           True, {})   # the window is long enough to demand ladder motion
+    if fast:
+        return
+    yield ("everywhere", steps,
+           FaultPlan.everywhere(seed=seed, prob=0.05, seconds=0.002),
+           False, {})  # low-rate scatter may not push past degrade_score
+    yield ("drop_and_stall", steps,
+           FaultPlan([FaultSpec("engine.transfer_drop", prob=0.3, **win),
+                      FaultSpec("engine.transfer_stall", prob=0.2,
+                                seconds=0.002, **win)], seed=seed),
+           False, {})
+    # the storage family needs the storage paths live: checkpoint cadence
+    # for ckpt.write, an on-disk policy store for store.put
+    yield ("storage", steps,
+           FaultPlan([FaultSpec("store.put", prob=0.5),
+                      FaultSpec("store.load", prob=0.5),
+                      FaultSpec("ckpt.write", prob=0.5, max_fires=2)],
+                     seed=seed),
+           False, {"checkpoint_every": steps // 3, "persist_store": True})
+
+
+def run(iters: int = 3, fast: bool = True, seed: int = 0) -> List[Row]:
+    rows: List[Row] = []
+    for name, steps, plan, need_ladder, kw in _scenarios(fast, seed):
+        rows.append(_compare(name, steps, seed, plan,
+                             require_ladder=need_ladder, **kw))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="single-scenario CI gate (~1 min CPU)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--audit-out", default="",
+                    help="stream the audit log (JSONL) here — the "
+                         "nightly evidence artifact")
+    args = ap.parse_args(argv)
+
+    if args.audit_out:
+        from repro import obs
+        obs.audit().attach_file(args.audit_out)
+
+    print("name,us_per_call,derived")
+    for name, sec, derived in run(fast=args.fast, seed=args.seed):
+        print(f"{name},{sec * 1e6:.1f},{derived}")
+    print("chaos gate: OK (no crash, bit-exact loss, bounded inflation)")
+
+
+if __name__ == "__main__":
+    main()

@@ -157,4 +157,19 @@ def run(iters: int = 5):
     rows.append(("monitor.obs.signature_traced", t_traced,
                  f"added<={added * 1e6:.1f}us vs untraced "
                  f"{t_plain * 1e6:.1f}us"))
+
+    # ---- disarmed fault hook (ISSUE 8): inject() sits on every transfer,
+    # alloc, store and checkpoint call, so with no plan armed it must cost
+    # one global read + a None check — same leave-it-on bar as tracing
+    from repro import faults
+
+    faults.disarm()
+
+    def inject_block():
+        for _ in range(100):
+            faults.inject("engine.transfer_error", key="bench")
+
+    t_inj = time_call(inject_block, iters=iters) / 100
+    rows.append(("monitor.faults.inject_disarmed", t_inj,
+                 "per-call cost with no FaultPlan armed"))
     return rows

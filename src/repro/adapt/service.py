@@ -43,7 +43,7 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro import obs
+from repro import faults, obs
 from repro.adapt.pipeline import AdaptationPipeline, AdaptResult
 from repro.adapt.snapshot import AdaptSnapshot
 
@@ -128,6 +128,10 @@ class AdaptationService:
         self.n_jobs = self.n_published = self.n_discarded = 0
         self.n_failed = self.n_installed = 0
         self.n_spec_jobs = self.n_spec_hits = 0
+        # hung-worker watchdog (repro.faults): wall-clock of the live
+        # (non-speculative) job's submission; cleared on poll/invalidate
+        self._live_submit_t: Optional[float] = None
+        self.n_watchdog = 0
 
     # --------------------------------------------------------- accounting
     def begin(self, step_idx: int) -> None:
@@ -171,6 +175,7 @@ class AdaptationService:
         """A new drift event supersedes everything in flight: bump the
         generation counter and drop any unconsumed mailbox result."""
         self.epoch += 1
+        self._live_submit_t = None
         with self._mb_lock:
             stale, self._mailbox = self._mailbox, None
         if stale is not None:
@@ -190,6 +195,8 @@ class AdaptationService:
                 self._snapshots.popitem(last=False)
             if not speculative:
                 self._live_exact = snap.iter_exact
+        if not speculative:
+            self._live_submit_t = time.monotonic()
         job = AdaptJob(snap, self.epoch, speculative)
         with self._ct_lock:
             self.n_jobs += 1
@@ -217,6 +224,12 @@ class AdaptationService:
                 self._jobs.task_done()
 
     def _run_job(self, job: AdaptJob) -> None:
+        f = faults.inject("adapt.hang", key=str(job.snapshot.step))
+        if f is not None and f.seconds > 0:
+            time.sleep(f.seconds)       # hung worker: watchdog territory
+        if faults.inject("adapt.worker", key=str(job.snapshot.step)):
+            raise RuntimeError(
+                f"injected adaptation-worker crash (step {job.snapshot.step})")
         if not job.speculative and job.epoch != self.epoch:
             # superseded while queued: don't burn background time on it
             with self._ct_lock:
@@ -321,7 +334,28 @@ class AdaptationService:
             return None
         with self._ct_lock:
             self.n_installed += 1
+        self._live_submit_t = None
         return res
+
+    def watchdog(self, timeout_s: float) -> bool:
+        """True when the live (non-speculative) job has been in flight
+        longer than ``timeout_s`` — a hung or lost worker.  Fires at most
+        once per job (the runtime responds by invalidating the epoch and
+        un-wedging the ADAPTING stage); 0 disables."""
+        t = self._live_submit_t
+        if timeout_s <= 0 or t is None:
+            return False
+        if time.monotonic() - t <= timeout_s:
+            return False
+        self._live_submit_t = None
+        with self._ct_lock:
+            self.n_watchdog += 1
+        obs.audit().event("adaptation.watchdog", timeout_s=timeout_s,
+                          queue_depth=self._jobs.qsize(),
+                          worker_alive=bool(self._worker is not None
+                                            and self._worker.is_alive()))
+        obs.metrics().counter("adaptation_watchdog")
+        return True
 
     # ------------------------------------------------- async: speculative
     def _park(self, res: AdaptResult) -> None:
@@ -414,6 +448,7 @@ class AdaptationService:
             "installed": self.n_installed,
             "speculative_jobs": self.n_spec_jobs,
             "speculative_hits": self.n_spec_hits,
+            "watchdog_fired": self.n_watchdog,
             "parked": len(self._parked),
             "snapshots": len(self._snapshots),
             "queue_depth": self._jobs.qsize(),

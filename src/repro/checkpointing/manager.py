@@ -33,7 +33,7 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -51,8 +51,16 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 class CheckpointManager:
+    # shard writes get a short bounded retry before the whole save fails —
+    # transient filesystem hiccups should not cost a checkpoint
+    WRITE_RETRIES = 2
+
     def __init__(self, directory: str, keep: int = 3,
-                 process_index: Optional[int] = None, engine=None):
+                 process_index: Optional[int] = None, engine=None,
+                 on_error: str = "raise"):
+        if on_error not in ("raise", "degrade"):
+            raise ValueError(f"on_error must be 'raise' or 'degrade', "
+                             f"got {on_error!r}")
         self.dir = directory
         self.keep = keep
         self.proc = (jax.process_index() if process_index is None
@@ -61,6 +69,13 @@ class CheckpointManager:
         # optional repro.hostmem TransferEngine: snapshot staging goes
         # through its lowest-priority "checkpoint" traffic class
         self.engine = engine
+        # "raise": an async write failure surfaces on the next wait()
+        # (legacy, fail-stop).  "degrade": it is audited and counted —
+        # training continues with one fewer restore point, matching the
+        # paper's training-never-crashes posture.
+        self.on_error = on_error
+        self.n_write_failures = 0
+        self.n_restore_fallbacks = 0
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -90,6 +105,12 @@ class CheckpointManager:
                 out[key] = ev
                 continue
             self.engine.wait(ev)
+            if ev.failed:
+                # staging failed terminally: the engine retained the
+                # source in HBM (ev.result) and already freed the slab —
+                # snapshot it with a plain host copy instead
+                out[key] = np.asarray(ev.result)
+                continue
             out[key] = ev.block.read()
             self.engine.pool.free(ev.block)
         return out
@@ -157,7 +178,7 @@ class CheckpointManager:
                     flat = self._collect(flat)
             fname = f"{name}.p{self.proc}.npz"
             path = os.path.join(tmp, fname)
-            np.savez(path, **flat)
+            self._write_shard(path, fname, flat)
             with open(path, "rb") as f:
                 digest = hashlib.sha256(f.read()).hexdigest()
             manifest["trees"][name] = {
@@ -174,6 +195,21 @@ class CheckpointManager:
             shutil.rmtree(tmp, ignore_errors=True)
         self._gc()
 
+    def _write_shard(self, path: str, fname: str, flat) -> None:
+        last: Optional[BaseException] = None
+        for attempt in range(self.WRITE_RETRIES + 1):
+            try:
+                if faults.inject("ckpt.write", key=fname) is not None:
+                    raise OSError(f"injected shard-write failure ({fname})")
+                np.savez(path, **flat)
+                return
+            except OSError as e:
+                last = e
+                obs.audit().event("ckpt.write_retry", file=fname,
+                                  attempt=attempt + 1, error=repr(e)[:120])
+                obs.metrics().counter("ckpt_write_retries")
+        raise last
+
     def wait(self):
         if self._thread is not None:
             self._thread.join()
@@ -181,9 +217,15 @@ class CheckpointManager:
         self._raise_if_failed()
 
     def _raise_if_failed(self):
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise RuntimeError(f"async checkpoint write failed: {err!r}")
+        if self._error is None:
+            return
+        err, self._error = self._error, None
+        self.n_write_failures += 1
+        if self.on_error == "degrade":
+            obs.audit().event("ckpt.write_failed", error=repr(err)[:200])
+            obs.metrics().counter("ckpt_write_failures")
+            return
+        raise RuntimeError(f"async checkpoint write failed: {err!r}")
 
     def _gc(self):
         steps = self.all_steps()
@@ -207,9 +249,37 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, step: int, templates: Dict[str, Any],
-                shardings: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+                shardings: Optional[Dict[str, Any]] = None,
+                fallback: bool = True):
         """Rebuild trees shaped like ``templates``; optional ``shardings``
-        (same structure) re-place arrays on a *new* mesh (elastic restore)."""
+        (same structure) re-place arrays on a *new* mesh (elastic restore).
+
+        When the requested checkpoint is unreadable (corrupt shard,
+        truncated manifest, missing file) and ``fallback`` is True, each
+        older ``step_N`` directory is tried in turn — losing the newest
+        restore point beats losing the job.  The corruption is audited
+        with the offending shard named; only when *no* checkpoint is
+        readable does the original error surface."""
+        candidates = [step]
+        if fallback:
+            candidates += [s for s in reversed(self.all_steps()) if s < step]
+        first_err: Optional[BaseException] = None
+        for s in candidates:
+            try:
+                return self._restore_one(s, templates, shardings)
+            except (OSError, KeyError, ValueError) as e:
+                if first_err is None:
+                    first_err = e
+                obs.audit().event("ckpt.restore_failed", step=s,
+                                  error=repr(e)[:200])
+                obs.metrics().counter("ckpt_restore_failures")
+                if s != candidates[-1]:
+                    self.n_restore_fallbacks += 1
+                    obs.audit().event("ckpt.restore_fallback", frm=s)
+        raise first_err
+
+    def _restore_one(self, step: int, templates: Dict[str, Any],
+                     shardings: Optional[Dict[str, Any]] = None):
         d = os.path.join(self.dir, f"step_{step:08d}")
         mpath = os.path.join(d, f"manifest.p{self.proc}.json")
         with open(mpath) as f:
@@ -224,7 +294,10 @@ class CheckpointManager:
             with open(path, "rb") as f:
                 digest = hashlib.sha256(f.read()).hexdigest()
             if digest != info["sha256"]:
-                raise IOError(f"checkpoint corruption in {path}")
+                raise IOError(
+                    f"checkpoint corruption in shard {info['file']} of "
+                    f"step {step}: sha256 {digest[:12]} != manifest "
+                    f"{info['sha256'][:12]} ({path})")
             flat = dict(np.load(path))
             leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
             sh_leaves = None

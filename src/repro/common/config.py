@@ -317,6 +317,47 @@ class AdaptConfig:
 
 
 @dataclass(frozen=True)
+class ResilienceConfig:
+    """Swap-path fault recovery (repro.faults): engine retry/timeout
+    parameters, link-health thresholds, and the degradation ladder.
+
+    The engine retries a failed transfer ``max_retries`` times with
+    exponential backoff; a copy slower than
+    ``max(timeout_floor_s, timeout_factor * predicted)`` counts as a
+    timeout.  Errors/timeouts/retries feed a per-traffic-class health
+    score; crossing ``degrade_score``/``fail_score`` drives the
+    degradation ladder in ``core/runtime.py`` (full → trimmed →
+    conservative → no_swap), which climbs back up after
+    ``recover_successes`` clean transfers (probe bursts generate them
+    when the reduced rung is otherwise silent)."""
+    enabled: bool = True
+    # ---- engine retry / timeout ----
+    max_retries: int = 3
+    retry_backoff_s: float = 0.002               # first retry delay
+    backoff_cap_s: float = 0.1                   # exponential backoff cap
+    timeout_floor_s: float = 0.05                # below this is never "slow"
+    timeout_factor: float = 8.0                  # x bwmodel-predicted time
+    # ---- health state machine ----
+    degrade_score: float = 2.0
+    fail_score: float = 6.0
+    recover_successes: int = 8
+    residual_limit: float = 8.0                  # measured/predicted ratio
+    health_decay: float = 0.7                    # score decay per clean copy
+    # first copies pay jax dispatch init + slab allocation and the
+    # bandwidth curve is still cold — no slow/timeout penalties until
+    # this many transfers have completed
+    health_warmup_transfers: int = 16
+    # ---- degradation ladder ----
+    ladder_hold_iterations: int = 2              # min iterations between moves
+    probe_interval: int = 8                      # iterations between probes
+    probe_burst: int = 4                         # round-trips per probe
+    probe_bytes: int = 1 << 20
+    trim_drop_fraction: float = 0.5              # max schedule cut at trimmed
+    # ---- adaptation-worker watchdog (hung worker un-wedges ADAPTING) ----
+    adapt_timeout_s: float = 30.0                # 0 disables
+
+
+@dataclass(frozen=True)
 class ChameleonConfig:
     """Paper hyperparameters (§4, §5, §7.1)."""
     enabled: bool = True
@@ -335,6 +376,7 @@ class ChameleonConfig:
     hostmem: HostMemConfig = HostMemConfig()     # host-memory tier (repro.hostmem)
     policystore: PolicyStoreConfig = PolicyStoreConfig()  # repro.policystore
     adapt: AdaptConfig = AdaptConfig()           # adaptation placement (repro.adapt)
+    resilience: ResilienceConfig = ResilienceConfig()  # fault recovery (repro.faults)
 
 
 @dataclass(frozen=True)

@@ -45,7 +45,11 @@ from repro.core import tokenizer
 from repro.core.executor import AppliedPolicy, Executor
 from repro.core.memtrace import build_timeline
 from repro.core.oom import warmup_offload_sites
-from repro.core.policy import ChameleonOOMError, SwapPolicy
+from repro.core.policy import (ChameleonOOMError, SwapPolicy,
+                               projected_peak)
+from repro.faults.ladder import (RUNG_CONSERVATIVE, RUNG_FULL, RUNG_NAMES,
+                                 RUNG_NO_SWAP, RUNG_TRIMMED,
+                                 DegradationLadder, trim_swap)
 from repro.core.profiler import ProfileData, profile_jaxpr
 from repro.core.stages import Stage, StageMachine
 from repro.policystore import DriftClassifier, PolicyStore, Tier
@@ -113,6 +117,16 @@ class ChameleonRuntime:
             max_snapshots=cfg.adapt.max_snapshots, history=cfg.adapt.history,
             pace_s=cfg.adapt.pace_s, pace_cap_s=cfg.adapt.pace_cap_s)
         self.machine = StageMachine(cfg, async_mode=adapt_mode != "inline")
+        # ---- degradation ladder (repro.faults): link health drives the
+        # applied policy down full → trimmed → conservative → no_swap and
+        # probe-driven recovery climbs it back up
+        self.ladder: Optional[DegradationLadder] = None
+        self._full_applied: Optional[AppliedPolicy] = None
+        self._probe_src: Optional[np.ndarray] = None
+        if cfg.enabled and self.hostmem is not None and cfg.resilience.enabled:
+            self.ladder = DegradationLadder(
+                hold_iterations=cfg.resilience.ladder_hold_iterations,
+                probe_interval=cfg.resilience.probe_interval)
         self._gen_knobs: Tuple[float, ...] = VARIANT_KNOBS
         self._last_sig: Optional[tokenizer.Signature] = None
         # dispatch-shape drift: same primitives, different memory profile
@@ -218,6 +232,12 @@ class ChameleonRuntime:
 
     def _audit_apply(self, kind: str, knob: Optional[float] = None) -> None:
         """Audit-log the policy taking effect (repro.obs drift trail)."""
+        if self.ladder is not None:
+            # a fresh adaptation supersedes any ladder degradation: it is
+            # the new rung-0 policy, and if the link is still bad the
+            # mirror traffic re-degrades health and the ladder re-descends
+            self._full_applied = self.applied
+            self.ladder.reset(self.step_idx, "new-policy")
         obs.audit().event(
             "policy.apply", policy_kind=kind, step=self.step_idx,
             policy=self.applied.fingerprint[:48], knob=knob,
@@ -403,7 +423,24 @@ class ChameleonRuntime:
             res = self.service.poll()
             if res is not None:
                 self._install_result(res, "adapt-installed")
+            elif self.service.watchdog(self.cfg.resilience.adapt_timeout_s):
+                # hung or lost worker: supersede its epoch (a late result
+                # can never install) and un-wedge the stage machine — the
+                # current policy keeps serving, which is safe by
+                # construction (it fit before the drift)
+                self.service.invalidate("worker-timeout")
+                self.machine.complete_adapting(self.step_idx,
+                                               "adapt-timeout")
+                self._finish_adaptation("timeout")
             self.adaptation_overhead_s += time.perf_counter() - t_install
+        # degradation ladder (repro.faults): react to link health after
+        # this iteration's engine feedback; GenPolicy iterations are
+        # skipped — the variant search overwrites self.applied anyway and
+        # _select_best's install resets the ladder
+        if self.ladder is not None and stage is not Stage.GENPOLICY:
+            t_ladder = time.perf_counter()
+            self._ladder_step()
+            self.adaptation_overhead_s += time.perf_counter() - t_ladder
         self.history.append({"step": self.step_idx, "stage": stage.value,
                              "policy": self.applied.fingerprint,
                              "t_iter": t_iter})
@@ -466,6 +503,88 @@ class ChameleonRuntime:
             eng.advance_op(e.swap_out_done_op)      # promised release point
         for e, ev in sorted(outs, key=lambda t: t[0].swap_in_op):
             eng.wait(eng.submit_swap_in(ev, SwapPolicy.entry_tag(e)))
+
+    # ------------------------------------ degradation ladder (repro.faults)
+    def _ladder_step(self) -> None:
+        """Consult link health and move the applied policy along the
+        ladder (full → trimmed → conservative → no_swap and back)."""
+        lad = self.ladder
+        eng = self.hostmem.engine
+        if lad.should_probe(self.step_idx):
+            self._health_probe(eng)
+        move = lad.decide(eng.health.worst(), self.step_idx)
+        if move is not None:
+            self._apply_rung(move)
+
+    def _health_probe(self, eng) -> None:
+        """Small round-trip copies through the engine: at a reduced rung
+        the applied policy may generate no link traffic at all, so these
+        probes are what feeds the health machine's recovery streak (and,
+        on a still-bad link, its error score)."""
+        rs = self.cfg.resilience
+        if self._probe_src is None:
+            self._probe_src = np.zeros(max(rs.probe_bytes, 1), np.uint8)
+        ok = 0
+        for _ in range(max(rs.probe_burst, 1)):
+            try:
+                ev = eng.wait(eng.submit_swap_out(self._probe_src,
+                                                  "health_probe"))
+                if ev.failed:
+                    continue             # failure already fed health
+                eng.wait(eng.submit_swap_in(ev, "health_probe"))
+                ok += 1
+            except Exception:  # noqa: BLE001 — probes must never raise
+                pass
+        obs.audit().event("ladder.probe", step=self.step_idx,
+                          rung=self.ladder.name, ok=ok,
+                          burst=max(rs.probe_burst, 1),
+                          health=self.hostmem.engine.health.worst())
+
+    def _apply_rung(self, rung: int) -> None:
+        """Rebuild ``self.applied`` for the rung the ladder moved to.
+        Rungs that cannot be built from available state fall through to
+        the next more conservative one."""
+        prof = self.profile or self.baseline_profile
+        applied: Optional[AppliedPolicy] = None
+        if rung == RUNG_FULL:
+            applied = self._full_applied or self.applied
+        elif rung == RUNG_TRIMMED:
+            full = self._full_applied or self.applied
+            if prof is not None and full is not None and full.swap is not None:
+                kept = trim_swap(prof, full.swap, self.budget,
+                                 self.cfg.resilience.trim_drop_fraction)
+                if kept is not None:
+                    swap = SwapPolicy(
+                        kept, projected_peak(prof, kept),
+                        full.swap.baseline_peak, full.swap.budget,
+                        full.swap.stall_time, full.swap.t_iter,
+                        full.swap.n_ops,
+                        contention_s=full.swap.contention_s)
+                    applied = self.executor.lower(swap, prof)
+        if applied is None and rung in (RUNG_TRIMMED, RUNG_CONSERVATIVE):
+            # conservative WarmUp rung: the Algo-3 passive fit — no
+            # per-tensor schedule, no release plan, guaranteed to fit
+            if prof is not None:
+                try:
+                    sites = warmup_offload_sites(prof, self.cfg, self.budget)
+                    applied = AppliedPolicy(
+                        None, sites,
+                        self.executor.site_universe(prof) - sites, set(),
+                        "ladder-warmup:" + ",".join(sorted(sites)))
+                except ChameleonOOMError:
+                    applied = self.executor.conservative(prof)
+            else:
+                applied = self.executor.conservative(None)
+        if applied is None:              # RUNG_NO_SWAP (or nothing else)
+            applied = self.executor.baseline()
+        self.applied = applied
+        self.executor.bind_release_points(applied, self.hostmem.engine)
+        self.hostmem.engine.begin_iteration()
+        obs.audit().event(
+            "ladder.apply", step=self.step_idx, rung=RUNG_NAMES[rung],
+            policy=applied.fingerprint[:48],
+            swap_entries=(len(applied.swap.entries) if applied.swap else 0),
+            release_plan=len(applied.release_plan))
 
     # ----------------------------------------------------- GenPolicy path
     def _genpolicy_step(self, t_iter: float) -> None:
@@ -611,6 +730,7 @@ class ChameleonRuntime:
                              if self.best and self.best.swap else 0.0),
             "profiling_overhead_s": self.profiling_overhead_s,
             "adaptation_overhead_s": self.adaptation_overhead_s,
+            "ladder": self.ladder.stats() if self.ladder else None,
             "signature": self._sig_acc.stats(),
             "hostmem": self.hostmem.stats() if self.hostmem else None,
             "policystore": self.policystore_stats(),

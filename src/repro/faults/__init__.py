@@ -1,0 +1,32 @@
+"""repro.faults — deterministic fault injection + the recovery machinery
+it exercises.
+
+Three pieces (see docs/robustness.md):
+
+  * :mod:`repro.faults.plan` — seeded :class:`FaultPlan` schedules with
+    process-global arming; hook points (:func:`inject`) are threaded
+    through the transfer engine, pinned pool, policy store, adaptation
+    worker and checkpoint writer, and are zero-cost no-ops when no plan
+    is armed;
+  * :mod:`repro.faults.health` — per-traffic-class link health state
+    machine (healthy → degraded → failed) fed by the engine's retry /
+    timeout / bandwidth-residual signals;
+  * :mod:`repro.faults.ladder` — the degradation ladder the runtime
+    steps the applied policy down when health degrades (full → trimmed →
+    conservative → no_swap) and climbs back up via recovery probes.
+"""
+from repro.faults.health import (DEGRADED, FAILED, HEALTHY, HealthMonitor,
+                                 LinkHealth)
+from repro.faults.ladder import (RUNG_CONSERVATIVE, RUNG_FULL, RUNG_NAMES,
+                                 RUNG_NO_SWAP, RUNG_TRIMMED,
+                                 DegradationLadder, trim_swap)
+from repro.faults.plan import (SITES, Fault, FaultPlan, FaultSpec, active,
+                               arm, armed, disarm, inject, injected, tick)
+
+__all__ = [
+    "SITES", "Fault", "FaultPlan", "FaultSpec",
+    "arm", "armed", "active", "disarm", "inject", "injected", "tick",
+    "HEALTHY", "DEGRADED", "FAILED", "HealthMonitor", "LinkHealth",
+    "DegradationLadder", "trim_swap", "RUNG_NAMES",
+    "RUNG_FULL", "RUNG_TRIMMED", "RUNG_CONSERVATIVE", "RUNG_NO_SWAP",
+]

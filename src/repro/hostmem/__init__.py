@@ -36,7 +36,7 @@ class HostMemTier:
     """Pool + engine + bandwidth model + kv-spill, wired together."""
 
     def __init__(self, cfg: Optional[HostMemConfig] = None, *,
-                 constant_gbps: float = 32.0):
+                 constant_gbps: float = 32.0, resilience=None):
         self.cfg = cfg or HostMemConfig()
         self.pool = PinnedSlabPool(
             capacity_bytes=self.cfg.pool_bytes or None,
@@ -44,7 +44,8 @@ class HostMemTier:
         self.bwmodel = BandwidthModel(constant_gbps)
         self.engine = TransferEngine(self.pool, depth=self.cfg.engine_depth,
                                      bwmodel=self.bwmodel,
-                                     class_depths=dict(self.cfg.class_depths))
+                                     class_depths=dict(self.cfg.class_depths),
+                                     resilience=resilience)
         self.kvspill = KVSpillManager(
             self.pool, self.engine,
             compression=self.cfg.spill_compression,
@@ -57,7 +58,8 @@ class HostMemTier:
         """Build the tier a ChameleonConfig asks for (None when disabled)."""
         if not ccfg.hostmem.enabled:
             return None
-        return cls(ccfg.hostmem, constant_gbps=ccfg.host_link_gbps)
+        return cls(ccfg.hostmem, constant_gbps=ccfg.host_link_gbps,
+                   resilience=ccfg.resilience)
 
     def calibrate(self, sizes=None, iters=None) -> "BandwidthModel":
         """Calibration transfers through the *production* path: each size

@@ -53,11 +53,17 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
+from repro.common.config import ResilienceConfig
+from repro.faults.health import HealthMonitor
 from repro.hostmem.pool import HostBlock, HostMemError, PinnedSlabPool
 
 SWAP_OUT = "out"                 # device -> host
 SWAP_IN = "in"                   # host -> device
+
+
+class TransferError(RuntimeError):
+    """A D2H/H2D copy failed (link fault, dropped DMA, device error)."""
 
 # Traffic classes, highest priority first (index == priority level).
 TC_POLICY_SWAP = "policy_swap"
@@ -78,6 +84,7 @@ class TransferEvent:
     nbytes: int
     cls: str = TC_POLICY_SWAP    # traffic class (stream selector)
     done: bool = False
+    failed: bool = False         # terminal failure (swap-out: retained in HBM)
     seconds: float = 0.0         # measured copy time once done
     block: Optional[HostBlock] = None   # staging slab (owned until swap-in)
     result: Any = None           # device array (swap-in only)
@@ -107,6 +114,9 @@ class ClassCounters:
     stall_transfers: int = 0     # ... this class had a transfer waiting
     preemptions: int = 0         # times this class jumped a lower-class head
     released_at_op: int = 0      # swap-outs retired by advance_op (§5.4.2)
+    retries: int = 0             # copy attempts re-issued after an error
+    timeouts: int = 0            # copies slower than the health limit
+    failures: int = 0            # terminal failures after retries exhausted
 
     def as_dict(self) -> dict:
         return {
@@ -118,17 +128,28 @@ class ClassCounters:
             "stall_transfers": self.stall_transfers,
             "preemptions": self.preemptions,
             "released_at_op": self.released_at_op,
+            "retries": self.retries,
+            "timeouts": self.timeouts,
+            "failures": self.failures,
         }
 
 
 class TransferEngine:
     def __init__(self, pool: PinnedSlabPool, *, depth: int = 2,
                  bwmodel=None, device_put: Optional[Callable] = None,
-                 class_depths: Optional[Dict[str, int]] = None):
+                 class_depths: Optional[Dict[str, int]] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         assert depth >= 1
         self.pool = pool
         self.depth = depth
         self.bwmodel = bwmodel
+        self.resilience = resilience or ResilienceConfig()
+        rs = self.resilience
+        self.health = HealthMonitor(
+            TRAFFIC_CLASSES, degrade_score=rs.degrade_score,
+            fail_score=rs.fail_score,
+            recover_successes=rs.recover_successes,
+            residual_limit=rs.residual_limit, decay=rs.health_decay)
         self._device_put = device_put or self._default_device_put
         self._depths = {c: depth for c in TRAFFIC_CLASSES}
         for c, d in (class_depths or {}).items():
@@ -148,6 +169,14 @@ class TransferEngine:
         self.bytes_out = self.bytes_in = 0
         self.time_out_s = self.time_in_s = 0.0
         self.forced_retires = 0          # completions forced by a full window
+        # ---- recovery counters (repro.faults) ----
+        self.n_retries = 0               # re-issued copy attempts
+        self._n_latency_obs = 0          # completed copies fed to health
+        self.n_timeouts = 0              # copies over the health time limit
+        self.n_failed_out = 0            # swap-outs retained in HBM
+        self.n_failed_in = 0             # swap-ins with data unavailable
+        self.n_sync_fallback_in = 0      # swap-ins served by synchronous copy
+        self.n_hbm_fallback_in = 0       # swap-ins short-circuited from HBM
 
     @staticmethod
     def _default_device_put(arr: np.ndarray):
@@ -192,7 +221,23 @@ class TransferEngine:
                     self.wait(block_or_event)     # auto-chain the dependency
                 if cls is None:
                     cls = block_or_event.cls
-                blk = block_or_event.block
+                src = block_or_event
+                if src.failed and src.result is not None:
+                    # the swap-out never left HBM (terminal D2H failure →
+                    # source retained): the swap-in short-circuits to the
+                    # retained device reference — bit-exact, zero copies
+                    self._eid += 1
+                    ev = TransferEvent(self._eid, SWAP_IN,
+                                       tag or src.tag, src.nbytes,
+                                       cls=self._check_class(cls),
+                                       done=True, result=src.result,
+                                       t_submit=time.perf_counter())
+                    self.n_hbm_fallback_in += 1
+                    obs.audit().event("engine.hbm_fallback_in",
+                                      cls=ev.cls, tag=ev.tag[:48],
+                                      nbytes=ev.nbytes)
+                    return ev
+                blk = src.block
             else:
                 blk = block_or_event
             cls = self._check_class(cls or TC_POLICY_SWAP)
@@ -246,17 +291,134 @@ class TransferEngine:
             self.by_class[waiting_cls].stall_s += ev.seconds
         return ev
 
-    def _execute(self, ev: TransferEvent) -> None:
-        t0 = time.perf_counter()
+    def _copy_once(self, ev: TransferEvent) -> None:
+        """One copy attempt, with the repro.faults hook points.  Raises on
+        failure; the staging slab survives across attempts.  A swap-out
+        *verifies* the payload landed before the device reference is
+        dropped, so a dropped D2H is caught while the source is still
+        held — the data can never be lost between retries."""
+        f = faults.inject("engine.transfer_stall", key=ev.tag)
+        if f is not None and f.seconds > 0:
+            time.sleep(f.seconds)
         if ev.kind == SWAP_OUT:
-            ev.block = self.pool.alloc(ev.nbytes, tag=ev.tag)
-            ev.block.write(ev._source)
+            if ev.block is None:
+                ev.block = self.pool.alloc(ev.nbytes, tag=ev.tag)
+            if faults.inject("engine.transfer_error", key=ev.tag) is not None:
+                raise TransferError(f"injected D2H failure ({ev.tag!r})")
+            if faults.inject("engine.transfer_drop", key=ev.tag) is None:
+                ev.block.write(ev._source)
+            if ev.block.shape is None:   # staging never landed (dropped DMA)
+                raise TransferError(f"D2H for {ev.tag!r} staged nothing")
             ev._source = None            # recordStream analogue: release here
         else:
+            if faults.inject("engine.transfer_error", key=ev.tag) is not None:
+                raise TransferError(f"injected H2D failure ({ev.tag!r})")
             host = ev.block.read()
+            if faults.inject("engine.transfer_drop", key=ev.tag) is not None:
+                raise TransferError(f"H2D for {ev.tag!r} dropped")
             ev.result = self._device_put(host)
             if getattr(ev, "_free_block", True):
                 self.pool.free(ev.block)
+
+    def _fail_transfer(self, ev: TransferEvent, err: BaseException) -> None:
+        """Terminal failure after retries: degrade, don't crash.
+
+        Swap-out: retain the source in HBM (the block simply never leaves
+        the device; a later swap-in short-circuits) — bit-exact at the
+        cost of budget headroom.  Swap-in: fall back to a synchronous
+        host-side copy that bypasses the async device-put path; only if
+        even the slab read fails is the original error surfaced (the
+        payload genuinely does not exist)."""
+        cc = self.by_class[ev.cls]
+        self.health.note_error(ev.cls)
+        if ev.kind == SWAP_OUT:
+            if ev.block is not None and not ev.block.freed:
+                self.pool.free(ev.block)     # exactly-once slab release
+            ev.block = None
+            ev.result, ev._source = ev._source, None
+            ev.failed = True
+            ev.done = True
+            self.n_failed_out += 1
+            cc.failures += 1
+            obs.audit().event("engine.swap_out_failed", cls=ev.cls,
+                              tag=ev.tag[:48], nbytes=ev.nbytes,
+                              error=repr(err)[:120])
+            obs.metrics().counter("engine_failed_out")
+        else:
+            try:
+                host = ev.block.read()
+            except Exception:
+                ev.failed = True
+                ev.done = True
+                self.n_failed_in += 1
+                cc.failures += 1
+                obs.audit().event("engine.swap_in_failed", cls=ev.cls,
+                                  tag=ev.tag[:48], nbytes=ev.nbytes,
+                                  error=repr(err)[:120])
+                raise err
+            ev.result = host                 # numpy result: jax converts
+            if getattr(ev, "_free_block", True):
+                self.pool.free(ev.block)
+            ev.done = True
+            self.n_sync_fallback_in += 1
+            obs.audit().event("engine.sync_fallback_in", cls=ev.cls,
+                              tag=ev.tag[:48], nbytes=ev.nbytes,
+                              error=repr(err)[:120])
+        for fn in ev._callbacks:
+            fn(ev)
+        ev._callbacks.clear()
+
+    def _note_latency(self, ev: TransferEvent, residual: Optional[float]
+                      ) -> None:
+        """Feed the health machine: a copy far over the bandwidth-model
+        prediction (or the absolute floor) is a timeout, anything else a
+        clean success carrying its residual."""
+        rs = self.resilience
+        self._n_latency_obs += 1
+        if self._n_latency_obs <= rs.health_warmup_transfers:
+            # cold start: predictions are not trustworthy yet, and the
+            # first copies pay jax dispatch/slab-alloc initialization —
+            # count them as plain successes, no residual
+            self.health.note_success(ev.cls, None)
+            return
+        limit = rs.timeout_floor_s
+        if residual is not None:
+            limit = max(limit, rs.timeout_factor * (ev.seconds / residual))
+        if ev.seconds > limit:
+            self.n_timeouts += 1
+            self.by_class[ev.cls].timeouts += 1
+            self.health.note_timeout(ev.cls)
+            obs.audit().event("engine.timeout", cls=ev.cls, tag=ev.tag[:48],
+                              seconds=round(ev.seconds, 4),
+                              limit=round(limit, 4))
+        else:
+            self.health.note_success(ev.cls, residual)
+
+    def _execute(self, ev: TransferEvent) -> None:
+        rs = self.resilience
+        attempts = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                self._copy_once(ev)
+                break
+            except Exception as err:     # noqa: BLE001 — injected or organic
+                if not rs.enabled:
+                    raise                # legacy behavior: surface directly
+                attempts += 1
+                if attempts > rs.max_retries:
+                    self._fail_transfer(ev, err)
+                    return
+                self.n_retries += 1
+                self.by_class[ev.cls].retries += 1
+                self.health.note_retry(ev.cls)
+                obs.audit().event("engine.retry", cls=ev.cls, dir=ev.kind,
+                                  tag=ev.tag[:48], attempt=attempts,
+                                  error=repr(err)[:120])
+                delay = min(rs.retry_backoff_s * (2 ** (attempts - 1)),
+                            rs.backoff_cap_s)
+                if delay > 0:
+                    time.sleep(delay)
         t1 = time.perf_counter()
         ev.seconds = t1 - t0
         ev.done = True
@@ -282,8 +444,17 @@ class TransferEngine:
             cc.n_in += 1
             cc.bytes_in += ev.nbytes
             cc.time_in_s += ev.seconds
+        residual = None
         if self.bwmodel is not None:
+            # residual against the *pre-sample* curve, then feed the EMA;
+            # the uncalibrated constant fallback wildly underestimates
+            # dispatch-bound copies, so its residuals are not evidence
+            pred = self.bwmodel.transfer_time(ev.nbytes)
+            if pred > 0 and self.bwmodel.is_calibrated:
+                residual = ev.seconds / pred
             self.bwmodel.observe(ev.nbytes, ev.seconds)
+        if self.resilience.enabled:
+            self._note_latency(ev, residual)
         for fn in ev._callbacks:
             fn(ev)
         ev._callbacks.clear()
@@ -471,5 +642,12 @@ class TransferEngine:
                 "forced_retires": self.forced_retires,
                 "planned_releases": len(self._planned_release),
                 "current_op": self.current_op,
+                "retries": self.n_retries,
+                "timeouts": self.n_timeouts,
+                "failed_out": self.n_failed_out,
+                "failed_in": self.n_failed_in,
+                "sync_fallback_in": self.n_sync_fallback_in,
+                "hbm_fallback_in": self.n_hbm_fallback_in,
+                "health": self.health.stats(),
                 "classes": classes,
             }

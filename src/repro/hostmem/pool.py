@@ -24,6 +24,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import faults
+
 PAGE = 4096                      # host page size used for alignment
 DEFAULT_MIN_CLASS = 1 << 12      # 4 KiB smallest slab class
 
@@ -109,6 +111,8 @@ class PinnedSlabPool:
     def alloc(self, nbytes: int, tag: str = "") -> HostBlock:
         if nbytes <= 0:
             raise HostMemError(f"invalid allocation size {nbytes}")
+        if faults.inject("pool.alloc", key=tag) is not None:
+            raise HostMemError(f"injected pinned-alloc failure ({tag!r})")
         cb = size_class(nbytes, self.min_class)
         with self._lock:
             self.alloc_count += 1
@@ -117,6 +121,12 @@ class PinnedSlabPool:
                 slab = bucket.pop()
                 self.reuse_hits += 1
             else:
+                # host-memory pressure: recycled slabs still serve, but a
+                # fresh reservation from the host allocator is denied
+                if faults.inject("pool.pressure", key=tag) is not None:
+                    raise HostMemError(
+                        f"injected host-memory pressure: fresh {cb}-byte "
+                        f"slab denied ({tag!r})")
                 if (self.capacity is not None
                         and self.bytes_reserved + cb > self.capacity):
                     raise HostMemError(

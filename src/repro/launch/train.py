@@ -58,6 +58,13 @@ def main():
     ap.add_argument("--stats-json", default="",
                     help="dump the full runtime stats() dict + obs "
                          "snapshot as JSON here on exit")
+    ap.add_argument("--fault-plan", default="",
+                    help="arm a repro.faults FaultPlan from this JSON file "
+                         "(chaos drills: seeded fault schedules keyed by "
+                         "site x iteration; see docs/robustness.md)")
+    ap.add_argument("--audit-out", default="",
+                    help="write the repro.obs audit log (JSONL) here on "
+                         "exit — the evidence trail for fault drills")
     args = ap.parse_args()
 
     if args.multihost:
@@ -90,6 +97,14 @@ def main():
     data = SyntheticTokens(cfg.vocab_size, seq, gb,
                            host_index=jax.process_index(),
                            host_count=jax.process_count()).start()
+    if args.audit_out:
+        # stream every audit event (not just the in-memory tail): the
+        # chaos-drill evidence trail must survive a crash
+        from repro import obs
+        obs.audit().attach_file(args.audit_out)
+    if args.fault_plan:
+        from repro import faults
+        faults.arm(faults.FaultPlan.load(args.fault_plan))
     tr = None
     try:
         tr = Trainer(cfg, tcfg, cham, mesh=mesh, data=data,
@@ -125,7 +140,17 @@ def main():
                   f"spec_hits={ad['speculative_hits']}")
     finally:
         data.stop()
+        if args.fault_plan:
+            from repro import faults
+            plan = faults.active()
+            if plan is not None:
+                print(f"fault plan: fired={plan.stats()['fired']}")
+            faults.disarm()
         if tr is not None:
+            lad = tr.rt.ladder
+            if lad is not None and lad.transitions:
+                print(f"ladder: rung={lad.name} "
+                      f"descents={lad.n_descents} ascents={lad.n_ascents}")
             tr.rt.close()
             _export_obs(args, tr.rt)
 

@@ -50,8 +50,10 @@ class AuditLog:
 
     # ------------------------------------------------------------- writing
     def event(self, kind: str, /, **fields) -> dict:
-        ev = {"seq": None, "t": time.time(), "kind": kind}
-        ev.update(_json_safe(fields))
+        # reserved keys stay authoritative: a payload field named "kind"
+        # must not silently rename the event
+        ev = dict(_json_safe(fields))
+        ev.update({"seq": None, "t": time.time(), "kind": kind})
         with self._lock:
             self._seq += 1
             ev["seq"] = self._seq

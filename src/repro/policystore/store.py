@@ -59,6 +59,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import faults, obs
 from repro.policystore.fingerprint import Fingerprint, similarity
 from repro.policystore.lshindex import LSHIndex
 
@@ -234,6 +235,7 @@ class PolicyStore:
         self.n_misses = self.n_evictions = 0
         self.n_loaded = self.n_corrupt = 0
         self.n_sim_evals = self.n_index_rebuilds = 0
+        self.n_io_errors = 0
         self.index = LSHIndex(int(getattr(cfg, "minhash_perms", 64)),
                               int(getattr(cfg, "lsh_bands", 16)))
         self._rows_dirty = True
@@ -260,6 +262,9 @@ class PolicyStore:
                                   if os.path.exists(p) else 0.0))
         for path in paths:
             try:
+                if faults.inject("store.load",
+                                 key=os.path.basename(path)) is not None:
+                    raise ValueError("injected corrupt record at load")
                 with open(path) as f:
                     rec = PolicyRecord.from_json(json.load(f))
             except (OSError, ValueError, KeyError, TypeError,
@@ -303,12 +308,20 @@ class PolicyStore:
     def _persist_index(self) -> None:
         if not self.dir or self.readonly:
             return
-        os.makedirs(self.dir, exist_ok=True)
-        tmp = self._index_path() + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.index.to_json(), f)
-        os.replace(tmp, self._index_path())
-        self._index_dirty_puts = 0
+        try:
+            os.makedirs(self.dir, exist_ok=True)
+            tmp = self._index_path() + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self.index.to_json(), f)
+            os.replace(tmp, self._index_path())
+            self._index_dirty_puts = 0
+        except OSError as e:
+            # a lost index write is self-healing (rebuilt at next attach
+            # by the key-set check) — never worth failing a put over
+            self.n_io_errors += 1
+            obs.audit().event("store.io_error", op="persist_index",
+                              error=str(e))
+            obs.metrics().counter("store_io_errors")
 
     # the index file serializes every record's band digests, so writing it
     # per put would make N inserts O(N^2) disk work at the ~1k-record scale
@@ -334,9 +347,30 @@ class PolicyStore:
             return
         os.makedirs(self.dir, exist_ok=True)
         tmp = self._path(rec.key) + ".tmp"
+        payload = json.dumps(rec.to_json())
         with open(tmp, "w") as f:
-            json.dump(rec.to_json(), f)
+            if faults.inject("store.put", key=rec.key) is not None:
+                # model a mid-write crash: half the payload lands, then
+                # the writer dies — the *.tmp file is left behind and the
+                # record file is never replaced (atomicity under test)
+                f.write(payload[: len(payload) // 2])
+                raise OSError("injected mid-write failure persisting record")
+            f.write(payload)
         os.replace(tmp, self._path(rec.key))
+
+    def _persist_safe(self, rec: PolicyRecord) -> bool:
+        """Mirror a record to disk without ever raising into the caller:
+        a full disk or injected write fault costs durability of this one
+        record (the in-memory copy keeps serving), never the train loop."""
+        try:
+            self._persist(rec)
+            return True
+        except OSError as e:
+            self.n_io_errors += 1
+            obs.audit().event("store.io_error", op="persist",
+                              key=rec.key, error=str(e))
+            obs.metrics().counter("store_io_errors")
+            return False
 
     def _evict_over_capacity(self) -> None:
         while len(self._records) > self.max_records:
@@ -358,7 +392,7 @@ class PolicyStore:
                                      rec.fingerprint.minhash))
             self._rows_dirty = True
             self._evict_over_capacity()
-            self._persist(rec)
+            self._persist_safe(rec)
             self._persist_index_amortized()
 
     def touch(self, rec: PolicyRecord) -> None:
@@ -375,7 +409,7 @@ class PolicyStore:
                 try:
                     os.utime(self._path(rec.key), None)
                 except OSError:
-                    self._persist(rec)      # file vanished: restore it
+                    self._persist_safe(rec)  # file vanished: restore it
 
     def refresh(self) -> int:
         """Pick up records another writer added to the directory since
@@ -660,6 +694,7 @@ class PolicyStore:
                 "evictions": self.n_evictions,
                 "loaded": self.n_loaded,
                 "corrupt_skipped": self.n_corrupt,
+                "io_errors": self.n_io_errors,
                 "sim_evals": self.n_sim_evals,
                 "index_rebuilds": self.n_index_rebuilds,
                 "index": self.index.stats(),

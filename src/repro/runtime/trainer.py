@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
 from repro.checkpointing.manager import CheckpointManager
 from repro.common.config import (AdaptConfig, ChameleonConfig, ModelConfig,
                                  TrainConfig)
@@ -89,7 +89,7 @@ class Trainer:
         self.opt_state = adamw_init(self.params)
         self.loss_scale = init_loss_scale(tcfg.loss_scale)
         self.step = 0
-        self.straggler = StragglerDetector()
+        self.straggler = StragglerDetector(on_straggler=self._on_straggler)
         self.report = TrainReport()
 
         def step_builder(policy):
@@ -99,9 +99,12 @@ class Trainer:
         # checkpoint drains share the host link with policy swaps: route
         # them through the engine's lowest-priority checkpoint stream so
         # swap traffic preempts the drain instead of queueing behind it
+        # resilience posture: a lost async checkpoint write degrades (one
+        # fewer restore point, audited) instead of killing the train loop
         self.ckpt = CheckpointManager(
             tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints,
-            engine=self.rt.hostmem.engine if self.rt.hostmem else None)
+            engine=self.rt.hostmem.engine if self.rt.hostmem else None,
+            on_error="degrade" if self.cham.resilience.enabled else "raise")
         self._apply = jax.jit(S.make_apply_step(cfg, tcfg))
         self._eval = jax.jit(S.make_eval_step(cfg))
         self._prepared = False
@@ -114,6 +117,13 @@ class Trainer:
         if self.rt.hostmem is not None:
             reg.register_provider("hostmem", self.rt.hostmem.stats)
         reg.register_provider("runtime", self._runtime_provider)
+
+    def _on_straggler(self, ev) -> None:
+        """Mitigation hook: structured evidence for the orchestrator."""
+        obs.audit().event("straggler.flagged", step=ev.step, host=ev.host,
+                          wall=round(ev.t, 6), mean=round(ev.mean, 6),
+                          std=round(ev.std, 6))
+        obs.metrics().counter("straggler_flagged")
 
     def _runtime_provider(self) -> dict:
         return {
@@ -191,6 +201,7 @@ class Trainer:
         return self.report
 
     def _one_step(self, batch, fault_hook=None):
+        faults.tick(self.step)   # armed fault plans key off the iteration
         t0 = time.perf_counter()
         fn = self.rt.step_fn()
         with obs.tracer().span(obs.LANE_COMPUTE, "train_step",
@@ -226,10 +237,14 @@ class Trainer:
 
         dt = time.perf_counter() - t0
         stage = self.rt.end_iteration(dt)
-        self.straggler.observe(self.step, dt)
+        # flag on the full critical-path latency (compute + end_iteration
+        # bookkeeping): a degraded host link or a drift stall shows up in
+        # the wall time even when the jitted step itself is healthy
+        wall = time.perf_counter() - t0
+        self.straggler.observe(self.step, wall)
         self.report.losses.append(float(loss))
         self.report.times.append(dt)
-        self.report.wall_times.append(time.perf_counter() - t0)
+        self.report.wall_times.append(wall)
         self.report.stages.append(stage.value)
         self.step += 1
         # step is incremented BEFORE any failure can be raised for this
