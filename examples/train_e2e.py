@@ -118,6 +118,7 @@ def export_obs(args, rt):
         counters = {"overlap_efficiency": [
             (h["t"], h["efficiency"]) for h in rt.overlap_history
             if h["efficiency"] is not None]}
+        counters.update(obs.ledger().counter_tracks())
         obs.export_chrome_trace(args.trace_out, obs.tracer(),
                                 counters=counters,
                                 meta={"preset": args.preset,

@@ -113,6 +113,9 @@ class CheckpointManager:
                 continue
             out[key] = ev.block.read()
             self.engine.pool.free(ev.block)
+            # staged checkpoint bytes leave the host tier here, with no
+            # H2D copy — balance the ledger's per-class gauge
+            obs.ledger().note_release(ev.cls, ev.tag, ev.nbytes)
         return out
 
     # ---------------------------------------------------------------- save
@@ -155,6 +158,8 @@ class CheckpointManager:
                                 self.engine.wait(ev)
                                 if ev.block is not None and not ev.block.freed:
                                     self.engine.pool.free(ev.block)
+                                    obs.ledger().note_release(
+                                        ev.cls, ev.tag, ev.nbytes)
                     except BaseException:
                         pass
 

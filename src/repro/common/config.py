@@ -353,6 +353,13 @@ class ResilienceConfig:
     probe_burst: int = 4                         # round-trips per probe
     probe_bytes: int = 1 << 20
     trim_drop_fraction: float = 0.5              # max schedule cut at trimmed
+    # ---- memory-ledger headroom feedback (repro.obs.memledger) ----
+    # when the realized peak overshoots the executed policy's projection
+    # AND the remaining budget headroom falls under this fraction, the
+    # ledger notes mild pressure on the "memory" health class (severe
+    # when the realized peak exceeds the budget outright) — so the
+    # ladder degrades on shrinking margin before an OOM
+    headroom_degrade_frac: float = 0.05
     # ---- adaptation-worker watchdog (hung worker un-wedges ADAPTING) ----
     adapt_timeout_s: float = 30.0                # 0 disables
 

@@ -47,6 +47,7 @@ from repro.core.memtrace import build_timeline
 from repro.core.oom import warmup_offload_sites
 from repro.core.policy import (ChameleonOOMError, SwapPolicy,
                                projected_peak)
+from repro.faults.health import MEM_CLASS
 from repro.faults.ladder import (RUNG_CONSERVATIVE, RUNG_FULL, RUNG_NAMES,
                                  RUNG_NO_SWAP, RUNG_TRIMMED,
                                  DegradationLadder, trim_swap)
@@ -444,14 +445,17 @@ class ChameleonRuntime:
         self.history.append({"step": self.step_idx, "stage": stage.value,
                              "policy": self.applied.fingerprint,
                              "t_iter": t_iter})
-        self._close_obs_window()
+        self._close_obs_window(ran)
         self.profiling_overhead_s += (time.perf_counter() - t0) - adapt_dt
         return stage
 
-    def _close_obs_window(self) -> None:
+    def _close_obs_window(self, ran: Optional[AppliedPolicy] = None) -> None:
         """Per-iteration overlap efficiency: how much of this window's
         engine transfer time was hidden under compute spans (after the
-        mirror swaps above, so the applied policy's traffic counts)."""
+        mirror swaps above, so the applied policy's traffic counts).
+        Then close the memory ledger's window for the policy that ran:
+        realized-peak replay, the predicted-vs-realized scoreboard, byte
+        conservation, and budget-headroom feedback into the health FSM."""
         t1 = time.perf_counter()
         eff, transfer_s, hidden_s = obs.window_efficiency(
             obs.tracer(), self._iter_t0, t1)
@@ -462,8 +466,45 @@ class ChameleonRuntime:
                 "hidden_s": hidden_s})
             obs.metrics().gauge("overlap_efficiency", eff, t=t1)
         obs.metrics().counter("iterations")
+        rec = obs.ledger().close_iteration(
+            self.step_idx,
+            profile=self.profile or self.baseline_profile,
+            swap=ran.swap if ran is not None else None,
+            budget=self.budget,
+            pool_stats=(self.hostmem.pool.stats()
+                        if self.hostmem is not None else None),
+            t=t1)
+        self._memledger_feedback(rec)
         self._iter_t0 = t1
         obs.tracer().set_iteration(self.step_idx)
+
+    def _memledger_feedback(self, rec: dict) -> None:
+        """Ledger → health FSM: sustained margin erosion (realized peak
+        above plan with the budget headroom nearly gone) degrades the
+        ``memory`` pseudo-class, so the ladder backs the policy off
+        *before* an OOM.  On a clean run realized == projected and the
+        class decays back to healthy like any link."""
+        if self.hostmem is None or self.ladder is None:
+            return
+        health = self.hostmem.engine.health
+        if MEM_CLASS not in health.links:
+            return
+        headroom, error = rec.get("headroom_frac"), rec.get("peak_error")
+        if headroom is None or error is None:
+            # nothing scored (warmup / conservative rung: no swap plan to
+            # compare against) — counts as a comfortable iteration
+            health.note_success(MEM_CLASS)
+            return
+        severe = headroom < 0.0
+        mild = (error > 0.0
+                and headroom < self.cfg.resilience.headroom_degrade_frac)
+        if severe or mild:
+            health.note_pressure(MEM_CLASS, severe=severe)
+            obs.audit().event("memory.pressure", step=rec["step"],
+                              severe=severe, headroom=round(headroom, 4),
+                              error=round(error, 4))
+        else:
+            health.note_success(MEM_CLASS)
 
     # --------------------------------------- §5.4.2 applied-swap traffic
     def _mirror_policy_swaps(self, applied: AppliedPolicy) -> None:
@@ -758,6 +799,7 @@ class ChameleonRuntime:
             },
             "tracer": obs.tracer().stats(),
             "audit": obs.audit().counts(),
+            "memory": obs.ledger().stats(),
         }
 
     def policystore_stats(self) -> Optional[dict]:

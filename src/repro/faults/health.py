@@ -33,6 +33,11 @@ DEGRADED = "degraded"
 FAILED = "failed"
 _LEVEL = {HEALTHY: 0, DEGRADED: 1, FAILED: 2}
 
+#: pseudo traffic class carrying HBM budget-headroom pressure from the
+#: obs memory ledger — same FSM, same ladder interface as link faults,
+#: so the runtime degrades on shrinking margin *before* an OOM
+MEM_CLASS = "memory"
+
 
 @dataclass
 class LinkHealth:
@@ -45,6 +50,7 @@ class LinkHealth:
     n_retries: int = 0
     n_timeouts: int = 0
     n_slow: int = 0
+    n_pressure: int = 0
     n_transitions: int = 0
 
     def as_dict(self) -> dict:
@@ -52,6 +58,7 @@ class LinkHealth:
                 "clean_streak": self.clean_streak,
                 "n_errors": self.n_errors, "n_retries": self.n_retries,
                 "n_timeouts": self.n_timeouts, "n_slow": self.n_slow,
+                "n_pressure": self.n_pressure,
                 "n_transitions": self.n_transitions}
 
 
@@ -102,6 +109,14 @@ class HealthMonitor:
 
     def note_error(self, cls: str) -> None:
         self._bump(cls, 1.0, "n_errors")
+
+    def note_pressure(self, cls: str, severe: bool = False) -> None:
+        """Memory-margin pressure from the obs ledger: *severe* (realized
+        peak past the budget) scores like a terminal error; *mild*
+        (realized peak above plan, headroom nearly gone) accumulates, so
+        sustained margin erosion degrades the class while a one-off blip
+        decays away."""
+        self._bump(cls, 1.0 if severe else 0.35, "n_pressure")
 
     def _bump(self, cls: str, weight: float, counter: str) -> None:
         with self._lock:

@@ -55,7 +55,7 @@ import numpy as np
 
 from repro import faults, obs
 from repro.common.config import ResilienceConfig
-from repro.faults.health import HealthMonitor
+from repro.faults.health import MEM_CLASS, HealthMonitor
 from repro.hostmem.pool import HostBlock, HostMemError, PinnedSlabPool
 
 SWAP_OUT = "out"                 # device -> host
@@ -117,6 +117,7 @@ class ClassCounters:
     retries: int = 0             # copy attempts re-issued after an error
     timeouts: int = 0            # copies slower than the health limit
     failures: int = 0            # terminal failures after retries exhausted
+    hwm_queued_bytes: int = 0    # high-water mark of the class backlog
 
     def as_dict(self) -> dict:
         return {
@@ -131,6 +132,7 @@ class ClassCounters:
             "retries": self.retries,
             "timeouts": self.timeouts,
             "failures": self.failures,
+            "hwm_queued_bytes": self.hwm_queued_bytes,
         }
 
 
@@ -145,8 +147,10 @@ class TransferEngine:
         self.bwmodel = bwmodel
         self.resilience = resilience or ResilienceConfig()
         rs = self.resilience
+        # the extra "memory" pseudo-class carries budget-headroom pressure
+        # from the obs memory ledger into the same FSM the ladder reads
         self.health = HealthMonitor(
-            TRAFFIC_CLASSES, degrade_score=rs.degrade_score,
+            TRAFFIC_CLASSES + (MEM_CLASS,), degrade_score=rs.degrade_score,
             fail_score=rs.fail_score,
             recover_successes=rs.recover_successes,
             residual_limit=rs.residual_limit, decay=rs.health_decay)
@@ -256,6 +260,11 @@ class TransferEngine:
     def _enqueue(self, ev: TransferEvent) -> None:
         q = self._pending[(ev.cls, ev.kind)]
         q.append(ev)
+        cc = self.by_class[ev.cls]
+        qb = sum(e.nbytes for k in (SWAP_OUT, SWAP_IN)
+                 for e in self._pending[(ev.cls, k)])
+        if qb > cc.hwm_queued_bytes:
+            cc.hwm_queued_bytes = qb
         while len(q) > self._depths[ev.cls]:  # class window overflow
             ran = self._step(ev.kind, waiting_cls=ev.cls)
             if ran is not None and ran.cls == ev.cls:
@@ -344,6 +353,10 @@ class TransferEngine:
                               tag=ev.tag[:48], nbytes=ev.nbytes,
                               error=repr(err)[:120])
             obs.metrics().counter("engine_failed_out")
+            # the retained tensor never left HBM: the ledger replays it
+            # as resident and flags the iteration's conservation check
+            obs.ledger().note_transfer("out", ev.cls, ev.tag, ev.nbytes,
+                                       failed=True, release_op=ev.release_op)
         else:
             try:
                 host = ev.block.read()
@@ -355,6 +368,8 @@ class TransferEngine:
                 obs.audit().event("engine.swap_in_failed", cls=ev.cls,
                                   tag=ev.tag[:48], nbytes=ev.nbytes,
                                   error=repr(err)[:120])
+                obs.ledger().note_transfer("in", ev.cls, ev.tag, ev.nbytes,
+                                           failed=True)
                 raise err
             ev.result = host                 # numpy result: jax converts
             if getattr(ev, "_free_block", True):
@@ -364,6 +379,7 @@ class TransferEngine:
             obs.audit().event("engine.sync_fallback_in", cls=ev.cls,
                               tag=ev.tag[:48], nbytes=ev.nbytes,
                               error=repr(err)[:120])
+            obs.ledger().note_transfer("in", ev.cls, ev.tag, ev.nbytes)
         for fn in ev._callbacks:
             fn(ev)
         ev._callbacks.clear()
@@ -429,6 +445,8 @@ class TransferEngine:
             t0, t1,
             arg=(ev.tag, ev.nbytes,
                  round(max(t0 - ev.t_submit, 0.0), 6) if ev.t_submit else 0.0))
+        obs.ledger().note_transfer(ev.kind, ev.cls, ev.tag, ev.nbytes,
+                                   release_op=ev.release_op, t=t1)
         cc = self.by_class[ev.cls]
         if ev.kind == SWAP_OUT:
             self.n_out += 1

@@ -85,6 +85,8 @@ class KVSpillManager:
         self.compress_min_bytes = compress_min_bytes
         self.n_spills = self.n_restores = self.n_discards = 0
         self.bytes_spilled = self.bytes_restored = 0
+        self.live_bytes = 0          # spill images currently host-resident
+        self.hwm_live_bytes = 0      # ... and their high-water mark
         self.bytes_raw = 0             # pre-compression row bytes
 
     # -------------------------------------------------- int8 field packing
@@ -143,6 +145,8 @@ class KVSpillManager:
                 packed, tag or "kvslot", cls=TC_KV_SPILL)
         self.n_spills += 1
         self.bytes_spilled += sp.nbytes
+        self.live_bytes += sp.nbytes
+        self.hwm_live_bytes = max(self.hwm_live_bytes, self.live_bytes)
         return sp
 
     # ------------------------------------------------------------ restore
@@ -184,6 +188,7 @@ class KVSpillManager:
         upd["pos"] = state.pos.at[slot].set(sp.pos)
         self.n_restores += 1
         self.bytes_restored += sp.nbytes
+        self.live_bytes = max(self.live_bytes - sp.nbytes, 0)
         return state._replace(**upd)
 
     def discard(self, sp: SpilledSlot) -> None:
@@ -196,12 +201,18 @@ class KVSpillManager:
         self.engine.wait(ev)                      # staging must retire
         self.pool.free(ev.block)
         self.n_discards += 1
+        self.live_bytes = max(self.live_bytes - ev.nbytes, 0)
+        # no H2D happens on a discard: tell the ledger the staged bytes
+        # left the host tier so its per-class gauges stay conserved
+        obs.ledger().note_release(TC_KV_SPILL, ev.tag, ev.nbytes)
 
     def stats(self) -> dict:
         return {"n_spills": self.n_spills, "n_restores": self.n_restores,
                 "n_discards": self.n_discards,
                 "bytes_spilled": self.bytes_spilled,
                 "bytes_restored": self.bytes_restored,
+                "live_bytes": self.live_bytes,
+                "hwm_live_bytes": self.hwm_live_bytes,
                 "compression": self.compression,
                 "bytes_raw": self.bytes_raw,
                 "compression_ratio": (self.bytes_raw / self.bytes_spilled

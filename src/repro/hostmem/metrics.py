@@ -34,7 +34,8 @@ def format_summary(stats: dict) -> str:
     p = stats.get("pool") or {}
     e = stats.get("engine") or {}
     lines = [
-        f"pool: {p.get('bytes_in_use', 0) / 2**20:.1f} MiB live / "
+        f"pool: {p.get('bytes_in_use', 0) / 2**20:.1f} MiB live "
+        f"(hwm {p.get('peak_bytes_in_use', 0) / 2**20:.1f} MiB) / "
         f"{p.get('bytes_reserved', 0) / 2**20:.1f} MiB reserved, "
         f"hit-rate {p.get('hit_rate', 0.0):.1%}, "
         f"frag {p.get('fragmentation', 0.0):.1%}",
@@ -57,6 +58,9 @@ def format_summary(stats: dict) -> str:
         if queued:
             line += (f", queued {c.get('queue_depth', 0)} "
                      f"({queued / 2**20:.1f} MiB)")
+        if c.get("hwm_queued_bytes"):
+            line += (f", backlog hwm "
+                     f"{c['hwm_queued_bytes'] / 2**20:.1f} MiB")
         lines.append(line)
     bw = stats.get("bwmodel") or {}
     points = bw.get("points", 0)
@@ -69,5 +73,7 @@ def format_summary(stats: dict) -> str:
         k = stats["kvspill"]
         lines.append(f"kvspill: {k.get('n_spills', 0)} spills / "
                      f"{k.get('n_restores', 0)} restores, "
-                     f"{k.get('bytes_spilled', 0) / 2**20:.1f} MiB out")
+                     f"{k.get('bytes_spilled', 0) / 2**20:.1f} MiB out, "
+                     f"live {k.get('live_bytes', 0) / 2**20:.1f} MiB "
+                     f"(hwm {k.get('hwm_live_bytes', 0) / 2**20:.1f} MiB)")
     return "\n".join(lines)

@@ -102,10 +102,15 @@ class PinnedSlabPool:
         self.bytes_in_use = 0            # requested bytes of live blocks
         self.class_bytes_in_use = 0      # slab bytes of live blocks
         self.peak_reserved = 0
+        self.peak_bytes_in_use = 0       # resident-bytes high-water mark
+        self.bytes_alloc_total = 0       # cumulative requested bytes allocated
+        self.bytes_freed_total = 0       # cumulative requested bytes freed
         self.alloc_count = 0
         self.reuse_hits = 0              # allocs served from a free list
         self.slab_allocs = 0             # allocs that created a fresh slab
         self.free_count = 0
+        self._class_in_use: Dict[int, int] = {}   # per-class resident bytes
+        self._class_peaks: Dict[int, int] = {}    # per-class resident HWM
 
     # ------------------------------------------------------------- alloc
     def alloc(self, nbytes: int, tag: str = "") -> HostBlock:
@@ -140,7 +145,14 @@ class PinnedSlabPool:
             blk = HostBlock(next(self._ids), nbytes, cb, slab, tag)
             self._live[blk.bid] = blk
             self.bytes_in_use += nbytes
+            self.bytes_alloc_total += nbytes
+            self.peak_bytes_in_use = max(self.peak_bytes_in_use,
+                                         self.bytes_in_use)
             self.class_bytes_in_use += cb
+            cu = self._class_in_use.get(cb, 0) + cb
+            self._class_in_use[cb] = cu
+            if cu > self._class_peaks.get(cb, 0):
+                self._class_peaks[cb] = cu
         return blk
 
     def free(self, blk: HostBlock) -> None:
@@ -150,7 +162,9 @@ class PinnedSlabPool:
             del self._live[blk.bid]
             blk.freed = True
             self.bytes_in_use -= blk.nbytes
+            self.bytes_freed_total += blk.nbytes
             self.class_bytes_in_use -= blk.class_bytes
+            self._class_in_use[blk.class_bytes] -= blk.class_bytes
             self._free.setdefault(blk.class_bytes, []).append(blk.data)
             self.free_count += 1
 
@@ -181,6 +195,10 @@ class PinnedSlabPool:
             "bytes_in_use": self.bytes_in_use,
             "bytes_free": self.bytes_free,
             "peak_reserved": self.peak_reserved,
+            "peak_bytes_in_use": self.peak_bytes_in_use,
+            "bytes_alloc_total": self.bytes_alloc_total,
+            "bytes_freed_total": self.bytes_freed_total,
+            "class_peaks": dict(self._class_peaks),
             "live_blocks": self.live_blocks,
             "alloc_count": self.alloc_count,
             "reuse_hits": self.reuse_hits,
@@ -195,3 +213,9 @@ class PinnedSlabPool:
         assert self.bytes_in_use == sum(b.nbytes for b in self._live.values())
         assert (self.class_bytes_in_use + self.bytes_free
                 == self.bytes_reserved), "slab bytes leaked"
+        # byte conservation: every requested byte is either still resident
+        # or has been explicitly freed
+        assert (self.bytes_alloc_total - self.bytes_freed_total
+                == self.bytes_in_use), "alloc/free byte ledger imbalance"
+        assert self.class_bytes_in_use == sum(
+            v for v in self._class_in_use.values()), "class ledger imbalance"

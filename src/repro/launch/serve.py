@@ -119,6 +119,7 @@ def main():
         obs.metrics().write_jsonl(args.metrics_out)
     if args.trace_out:
         obs.export_chrome_trace(args.trace_out, obs.tracer(),
+                                counters=obs.ledger().counter_tracks(),
                                 meta={"arch": args.arch,
                                       "requests": args.requests})
         print(f"trace: {args.trace_out} "

@@ -123,6 +123,12 @@ def main():
                   f"transfer-active iterations "
                   f"({ov['hidden_s'] * 1e3:.1f} of "
                   f"{ov['transfer_s'] * 1e3:.1f} ms hidden)")
+        from repro import obs as _obs
+        sb = _obs.ledger().scoreboard()
+        if sb["n"]:
+            print(f"memory ledger: {sb['n']} scored iterations, peak error "
+                  f"mean |e| {sb['mean_abs_error']:.2%} / "
+                  f"max |e| {sb['max_abs_error']:.2%}")
         ps = rep.policystore
         if ps is not None:
             t, s = ps["tiers"], ps["store"]
@@ -168,6 +174,7 @@ def _export_obs(args, rt) -> None:
         counters = {"overlap_efficiency": [
             (h["t"], h["efficiency"]) for h in rt.overlap_history
             if h["efficiency"] is not None]}
+        counters.update(obs.ledger().counter_tracks())
         obs.export_chrome_trace(args.trace_out, obs.tracer(),
                                 counters=counters,
                                 meta={"arch": args.arch,

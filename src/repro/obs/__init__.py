@@ -13,18 +13,25 @@ on" bar:
     scattered ``stats()`` dicts register into, with a JSONL snapshot
     writer;
   * :class:`AuditLog` — structured drift-decision events (classify /
-    demote / apply / store-put / stage transitions).
+    demote / apply / store-put / stage transitions);
+  * :class:`MemoryLedger` — per-iteration realized HBM occupancy replay
+    from observed swap/spill/checkpoint events: realized peak + top-k
+    attribution, the predicted-vs-realized Simulator scoreboard,
+    budget-headroom feedback for the health FSM, byte-conservation leak
+    detection, and the :data:`LEDGER_TRACKS` Perfetto counter tracks.
 
 Process-wide defaults are exposed through :func:`tracer`,
-:func:`metrics`, and :func:`audit` — subsystems record into them without
-plumbing an object through every constructor, exactly like a logging
-root logger.  Tests that need isolation swap them with
-:func:`set_tracer` / :func:`set_audit` / :func:`set_metrics` (each
-returns the previous instance) or simply ``clear()`` the defaults.
+:func:`metrics`, :func:`audit`, and :func:`ledger` — subsystems record
+into them without plumbing an object through every constructor, exactly
+like a logging root logger.  Tests that need isolation swap them with
+:func:`set_tracer` / :func:`set_audit` / :func:`set_metrics` /
+:func:`set_ledger` (each returns the previous instance) or simply
+``clear()`` the defaults.
 """
 from __future__ import annotations
 
 from repro.obs.audit import AuditLog
+from repro.obs.memledger import LEDGER_TRACKS, MemoryLedger
 from repro.obs.metrics import MetricsRegistry, SNAPSHOT_KEYS
 from repro.obs.overlap import (interval_union, overlap_efficiency,
                                window_efficiency)
@@ -36,17 +43,20 @@ from repro.obs.validate import validate_chrome_trace, validate_metrics_jsonl
 
 __all__ = [
     "AuditLog", "MetricsRegistry", "SpanTracer", "SNAPSHOT_KEYS",
+    "MemoryLedger", "LEDGER_TRACKS",
     "LANES", "LANE_ID", "LANE_COMPUTE", "LANE_POLICY_SWAP", "LANE_KV_SPILL",
     "LANE_CHECKPOINT", "LANE_ADAPT", "TRANSFER_LANES",
     "chrome_trace_events", "export_chrome_trace",
     "interval_union", "overlap_efficiency", "window_efficiency",
     "validate_chrome_trace", "validate_metrics_jsonl",
-    "tracer", "metrics", "audit", "set_tracer", "set_metrics", "set_audit",
+    "tracer", "metrics", "audit", "ledger",
+    "set_tracer", "set_metrics", "set_audit", "set_ledger",
 ]
 
 _tracer = SpanTracer()
 _metrics = MetricsRegistry()
 _audit = AuditLog()
+_ledger = MemoryLedger()
 
 
 def tracer() -> SpanTracer:
@@ -64,6 +74,11 @@ def audit() -> AuditLog:
     return _audit
 
 
+def ledger() -> MemoryLedger:
+    """The process-wide default memory ledger (always on)."""
+    return _ledger
+
+
 def set_tracer(t: SpanTracer) -> SpanTracer:
     global _tracer
     old, _tracer = _tracer, t
@@ -79,4 +94,10 @@ def set_metrics(m: MetricsRegistry) -> MetricsRegistry:
 def set_audit(a: AuditLog) -> AuditLog:
     global _audit
     old, _audit = _audit, a
+    return old
+
+
+def set_ledger(l: MemoryLedger) -> MemoryLedger:
+    global _ledger
+    old, _ledger = _ledger, l
     return old

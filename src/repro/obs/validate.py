@@ -7,7 +7,8 @@ before the artifact is uploaded:
 
     PYTHONPATH=src python -m repro.obs.validate out.trace.json \
         --require-lanes compute,policy_swap,kv_spill,checkpoint,adapt \
-        --require-counter overlap_efficiency \
+        --require-counters overlap_efficiency,hbm_dynamic,swapped_out \
+        --require-providers memory \
         --metrics metrics.jsonl
 
 Also importable (``validate_chrome_trace``) so tests assert the same
@@ -29,7 +30,8 @@ _PHASES_WITH_TS = {"X", "i", "C"}
 
 def validate_chrome_trace(obj: dict, *,
                           require_lanes: Iterable[str] = (),
-                          require_counter: Optional[str] = None) -> dict:
+                          require_counter: Optional[str] = None,
+                          require_counters: Iterable[str] = ()) -> dict:
     """Validate a loaded trace object; returns a summary dict.  Raises
     ``ValueError`` with a precise message on the first schema problem."""
     if not isinstance(obj, dict) or "traceEvents" not in obj:
@@ -73,17 +75,26 @@ def validate_chrome_trace(obj: dict, *,
         if span_lanes.get(lane, 0) == 0:
             raise ValueError(f"no spans on required lane {lane!r} "
                              f"(got {span_lanes})")
-    if require_counter is not None and counters.get(require_counter, 0) == 0:
-        raise ValueError(f"no '{require_counter}' counter events "
-                         f"(got {sorted(counters)})")
+    wanted = list(require_counters)
+    if require_counter is not None:
+        wanted.append(require_counter)
+    for cname in wanted:
+        if counters.get(cname, 0) == 0:
+            raise ValueError(f"no '{cname}' counter events "
+                             f"(got {sorted(counters)})")
     return {"n_events": len(events), "n_spans": n_spans,
             "n_instants": n_instants, "span_lanes": span_lanes,
             "counters": counters}
 
 
-def validate_metrics_jsonl(path: str) -> dict:
-    """Every line must be a registry snapshot with the documented keys."""
+def validate_metrics_jsonl(path: str, *,
+                           require_gauges: Iterable[str] = (),
+                           require_providers: Iterable[str] = ()) -> dict:
+    """Every line must be a registry snapshot with the documented keys;
+    the *last* snapshot must additionally carry the required gauges and
+    provider blocks (e.g. the ledger's ``memory`` provider)."""
     n = 0
+    last = None
     with open(path) as f:
         for i, line in enumerate(f):
             if not line.strip():
@@ -93,9 +104,19 @@ def validate_metrics_jsonl(path: str) -> dict:
             if missing:
                 raise ValueError(f"snapshot line {i} missing keys {missing}")
             n += 1
+            last = snap
     if n == 0:
         raise ValueError(f"{path}: no snapshots")
-    return {"snapshots": n}
+    for g in require_gauges:
+        if g not in last.get("gauges", {}):
+            raise ValueError(f"last snapshot missing gauge {g!r} "
+                             f"(got {sorted(last.get('gauges', {}))})")
+    for p in require_providers:
+        if p not in last.get("providers", {}):
+            raise ValueError(f"last snapshot missing provider {p!r} "
+                             f"(got {sorted(last.get('providers', {}))})")
+    return {"snapshots": n, "gauges": sorted(last.get("gauges", {})),
+            "providers": sorted(last.get("providers", {}))}
 
 
 def main(argv=None) -> int:
@@ -106,19 +127,32 @@ def main(argv=None) -> int:
     ap.add_argument("--require-counter", default=None,
                     help="counter track that must be present (e.g. "
                          "overlap_efficiency)")
+    ap.add_argument("--require-counters", default="",
+                    help="comma-separated counter tracks that must all be "
+                         "present (e.g. hbm_dynamic,swapped_out)")
+    ap.add_argument("--require-gauges", default="",
+                    help="gauges the last metrics snapshot must carry")
+    ap.add_argument("--require-providers", default="",
+                    help="provider blocks the last metrics snapshot must "
+                         "carry (e.g. memory)")
     ap.add_argument("--metrics", default=None,
                     help="also validate this metrics JSONL file")
     args = ap.parse_args(argv)
     with open(args.trace) as f:
         obj = json.load(f)
-    lanes = [l for l in args.require_lanes.split(",") if l]
-    summary = validate_chrome_trace(obj, require_lanes=lanes,
-                                    require_counter=args.require_counter)
+    split = lambda s: [x for x in s.split(",") if x]
+    summary = validate_chrome_trace(
+        obj, require_lanes=split(args.require_lanes),
+        require_counter=args.require_counter,
+        require_counters=split(args.require_counters))
     print(f"{args.trace}: OK — {summary['n_spans']} spans over lanes "
           f"{summary['span_lanes']}, counters {summary['counters']}")
     if args.metrics:
-        ms = validate_metrics_jsonl(args.metrics)
-        print(f"{args.metrics}: OK — {ms['snapshots']} snapshots")
+        ms = validate_metrics_jsonl(
+            args.metrics, require_gauges=split(args.require_gauges),
+            require_providers=split(args.require_providers))
+        print(f"{args.metrics}: OK — {ms['snapshots']} snapshots, "
+              f"providers {ms['providers']}")
     return 0
 
 

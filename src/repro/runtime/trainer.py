@@ -117,6 +117,8 @@ class Trainer:
         if self.rt.hostmem is not None:
             reg.register_provider("hostmem", self.rt.hostmem.stats)
         reg.register_provider("runtime", self._runtime_provider)
+        # via a lambda: set_ledger may swap the default between snapshots
+        reg.register_provider("memory", lambda: obs.ledger().stats())
 
     def _on_straggler(self, ev) -> None:
         """Mitigation hook: structured evidence for the orchestrator."""

@@ -1,0 +1,373 @@
+"""Memory-ledger tests (ISSUE 9): realized-occupancy replay parity with
+``projected_peak``, byte-conservation under the fast chaos scenario, the
+``memory`` health-class pressure path, counter-track export validation,
+and a ``repro.obs.report`` smoke test."""
+import json
+import os
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import faults, obs
+from repro.common.config import ResilienceConfig
+from repro.core.policy import projected_peak
+from repro.faults.health import DEGRADED, HEALTHY, MEM_CLASS, HealthMonitor
+from repro.faults.plan import FaultPlan, FaultSpec
+from repro.hostmem.engine import TC_POLICY_SWAP, TransferEngine
+from repro.hostmem.pool import PinnedSlabPool
+from repro.obs.memledger import LEDGER_TRACKS, MemoryLedger
+from repro.obs.report import main as report_main
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    """Isolated obs singletons per test (and faults disarmed)."""
+    faults.disarm()
+    old_l = obs.set_ledger(MemoryLedger())
+    old_m = obs.set_metrics(obs.MetricsRegistry())
+    old_a = obs.set_audit(obs.AuditLog())
+    yield
+    faults.disarm()
+    obs.set_ledger(old_l)
+    obs.set_metrics(old_m)
+    obs.set_audit(old_a)
+
+
+# ----------------------------------------------------- fake profile bits
+def _tensor(uid, birth, death, nbytes, layer=0, site="act"):
+    return SimpleNamespace(uid=uid, birth=birth, death=death,
+                           nbytes=nbytes, layer=layer, site=site)
+
+
+def _profile(tensors, n_ops, static=1000):
+    return SimpleNamespace(tensors=list(tensors), n_ops=n_ops,
+                           static_bytes=static)
+
+
+def _entry(t, out_op, in_op):
+    return SimpleNamespace(uid=t.uid, layer=t.layer, site=t.site,
+                           nbytes=t.nbytes, birth=t.birth,
+                           swap_out_done_op=out_op, swap_in_op=in_op)
+
+
+def _tag(e):
+    return f"{e.site or 'tensor'}:{e.layer}:{e.uid}"
+
+
+def _swap(prof, entries):
+    return SimpleNamespace(entries=list(entries),
+                           projected_peak=projected_peak(prof, entries))
+
+
+def _scenario():
+    """Three overlapping tensors; the two swap entries' off-device
+    windows cover the baseline peak, so the policy genuinely lowers it
+    (and a failed swap-out genuinely raises the realized peak back)."""
+    ts = [_tensor(1, 0, 10, 4096), _tensor(2, 1, 9, 8192),
+          _tensor(3, 3, 7, 2048)]
+    prof = _profile(ts, n_ops=10)
+    entries = [_entry(ts[1], out_op=2, in_op=8),
+               _entry(ts[2], out_op=4, in_op=6)]
+    return prof, ts, entries
+
+
+# -------------------------------------------------------- replay parity
+def test_realized_equals_projected_when_observed_on_plan():
+    prof, _, entries = _scenario()
+    swap = _swap(prof, entries)
+    led = obs.ledger()
+    for e in entries:
+        led.note_transfer("out", TC_POLICY_SWAP, _tag(e), e.nbytes,
+                          release_op=e.swap_out_done_op)
+    rec = led.close_iteration(1, profile=prof, swap=swap,
+                              budget=swap.projected_peak * 2)
+    assert rec["realized_peak"] == swap.projected_peak
+    assert rec["peak_error"] == 0.0
+    assert rec["n_observed"] == 2 and rec["n_failed"] == 0
+    assert rec["conservation"]["ok"]
+    assert 0.4 < rec["headroom_frac"] <= 0.5
+
+
+def test_unobserved_entries_fall_back_to_planned_windows():
+    prof, _, entries = _scenario()
+    swap = _swap(prof, entries)
+    rec = obs.ledger().close_iteration(1, profile=prof, swap=swap)
+    assert rec["realized_peak"] == swap.projected_peak
+    assert rec["n_unobserved"] == 2
+
+
+def test_failed_swap_out_retained_in_hbm_raises_realized_peak():
+    prof, _, entries = _scenario()
+    swap = _swap(prof, entries)
+    led = obs.ledger()
+    led.note_transfer("out", TC_POLICY_SWAP, _tag(entries[1]),
+                      entries[1].nbytes, release_op=entries[1].swap_out_done_op)
+    led.note_transfer("out", TC_POLICY_SWAP, _tag(entries[0]),
+                      entries[0].nbytes, failed=True)
+    rec = led.close_iteration(1, profile=prof, swap=swap,
+                              budget=swap.projected_peak)
+    assert rec["n_failed"] == 1
+    assert rec["realized_peak"] > swap.projected_peak
+    assert rec["peak_error"] > 0.0
+    assert rec["headroom_frac"] < 0.0          # overshot the budget
+    assert not rec["conservation"]["ok"]
+    reasons = {s["reason"] for s in rec["conservation"]["suspects"]}
+    assert "swap_out_failed" in reasons
+    # the failed tensor shows up resident in the peak attribution
+    assert any(a["tag"] == _tag(entries[0]) for a in rec["attribution"])
+
+
+def test_attribution_names_topk_resident_tensors():
+    prof, ts, entries = _scenario()
+    rec = obs.ledger().close_iteration(1, profile=prof,
+                                       swap=_swap(prof, entries))
+    tags = [a["tag"] for a in rec["attribution"]]
+    assert _tag(_entry(ts[0], 0, 0)) in tags   # never swapped: resident
+    assert rec["attribution"] == sorted(rec["attribution"],
+                                        key=lambda a: -a["nbytes"])
+
+
+def test_scoreboard_aggregates_and_gauges():
+    prof, _, entries = _scenario()
+    swap = _swap(prof, entries)
+    led = obs.ledger()
+    for step in range(3):
+        led.close_iteration(step, profile=prof, swap=swap,
+                            budget=swap.projected_peak * 2)
+    sb = led.scoreboard()
+    assert sb["n"] == 3 and sb["max_abs_error"] == 0.0
+    snap = obs.metrics().snapshot()
+    assert "memory.realized_peak" in snap["gauges"]
+    assert "memory.peak_error" in snap["gauges"]
+    assert obs.audit().counts().get("memory.peak") == 3
+    stats = led.stats()
+    assert stats["iterations"] == 3
+    assert stats["scoreboard"]["n"] == 3
+
+
+# ------------------------------------------------- engine-fed conservation
+def _engine(**rs_kw):
+    pool = PinnedSlabPool()
+    rs = ResilienceConfig(retry_backoff_s=0.0, **rs_kw)
+    return pool, TransferEngine(pool, resilience=rs,
+                                device_put=lambda a: np.asarray(a))
+
+
+def _roundtrips(eng, n, nbytes=2048):
+    for i in range(n):
+        ev = eng.submit_swap_out(np.full(nbytes, i % 251, np.uint8),
+                                 f"t:{i}")
+        eng.wait(eng.submit_swap_in(ev, f"t:{i}"))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_conservation_holds_across_fast_chaos(seed):
+    """The fast chaos scenario (everywhere-scatter, same shape as
+    ``benchmarks/chaos_bench.py --fast``): the pool's byte ledger stays
+    balanced every iteration, and only *terminal* transfer failures can
+    appear as suspects — a clean iteration reports none."""
+    faults.disarm()
+    led = obs.set_ledger(MemoryLedger())
+    try:
+        pool, eng = _engine()
+        plan = FaultPlan.everywhere(seed=seed, prob=0.2, seconds=0.0)
+        with faults.injected(plan):
+            for it in range(4):
+                faults.tick(it)
+                try:
+                    _roundtrips(eng, 3)
+                except Exception:
+                    pass               # terminal H2D losses surface; fine
+                rec = obs.ledger().close_iteration(
+                    it, pool_stats=pool.stats())
+                cons = rec["conservation"]
+                # pool alloc/free byte accounting must balance even with
+                # injected alloc failures and terminal transfer faults
+                assert not any(s["reason"] == "pool_imbalance"
+                               for s in cons["suspects"])
+                pool.check()
+        # clean epilogue: with faults disarmed, no new suspects appear
+        _roundtrips(eng, 3)
+        rec = obs.ledger().close_iteration(99, pool_stats=pool.stats())
+        assert rec["conservation"]["ok"]
+        pool.check()
+    finally:
+        obs.set_ledger(led)
+
+
+def test_clean_run_has_no_leak_suspects():
+    pool, eng = _engine()
+    _roundtrips(eng, 8)
+    rec = obs.ledger().close_iteration(1, pool_stats=pool.stats())
+    assert rec["conservation"]["ok"]
+    assert obs.ledger().n_leak_suspects == 0
+    assert pool.stats()["peak_bytes_in_use"] > 0
+    assert pool.stats()["bytes_alloc_total"] == pool.stats()[
+        "bytes_freed_total"]
+
+
+def test_injected_drop_fault_is_flagged_as_leak_suspect():
+    pool, eng = _engine()
+    plan = FaultPlan([FaultSpec("engine.transfer_drop", prob=1.0)], seed=7)
+    with faults.injected(plan):
+        ev = eng.submit_swap_out(np.ones(4096, np.uint8), "victim")
+        eng.wait(ev)
+    assert ev.failed                       # terminal: retained in HBM
+    rec = obs.ledger().close_iteration(1, pool_stats=pool.stats())
+    assert not rec["conservation"]["ok"]
+    suspects = rec["conservation"]["suspects"]
+    assert any(s["tag"].startswith("victim")
+               and s["reason"] == "swap_out_failed" for s in suspects)
+    assert obs.audit().counts().get("memory.leak_suspect") == 1
+    pool.check()                           # the slab itself was recycled
+
+
+# ------------------------------------------------ memory health pressure
+def test_memory_pressure_degrades_and_recovers():
+    hm = HealthMonitor([MEM_CLASS], degrade_score=2.0, fail_score=6.0,
+                       recover_successes=8, decay=0.7)
+    assert hm.worst() == HEALTHY
+    for _ in range(6):                     # sustained mild margin erosion
+        hm.note_pressure(MEM_CLASS, severe=False)
+    assert hm.state(MEM_CLASS) == DEGRADED
+    assert hm.links[MEM_CLASS].n_pressure == 6
+    for _ in range(20):                    # comfortable iterations decay it
+        hm.note_success(MEM_CLASS)
+    assert hm.state(MEM_CLASS) == HEALTHY
+
+
+def test_severe_pressure_scores_like_an_error():
+    hm = HealthMonitor([MEM_CLASS], degrade_score=2.0)
+    hm.note_pressure(MEM_CLASS, severe=True)
+    hm.note_pressure(MEM_CLASS, severe=True)
+    assert hm.state(MEM_CLASS) == DEGRADED
+
+
+def test_engine_health_includes_memory_class():
+    _, eng = _engine()
+    assert MEM_CLASS in eng.health.links
+    assert eng.health.worst() == HEALTHY
+
+
+# -------------------------------------------- export + validate + report
+def test_counter_tracks_export_passes_validator(tmp_path):
+    prof, _, entries = _scenario()
+    led = obs.ledger()
+    led.close_iteration(1, profile=prof, swap=_swap(prof, entries),
+                        pool_stats={"bytes_in_use": 512,
+                                    "bytes_alloc_total": 512,
+                                    "bytes_freed_total": 0})
+    tracks = led.counter_tracks()
+    assert set(tracks) == set(LEDGER_TRACKS)
+    assert all(tracks[name] for name in LEDGER_TRACKS)
+    path = str(tmp_path / "t.trace.json")
+    obs.export_chrome_trace(path, obs.tracer(), counters=tracks)
+    with open(path) as f:
+        summary = obs.validate_chrome_trace(
+            json.load(f), require_counters=LEDGER_TRACKS)
+    for name in LEDGER_TRACKS:
+        assert summary["counters"][name] >= 1
+    with pytest.raises(ValueError, match="no 'nope' counter"):
+        with open(path) as f:
+            obs.validate_chrome_trace(json.load(f),
+                                      require_counters=("nope",))
+
+
+def test_metrics_validator_checks_gauges_and_providers(tmp_path):
+    prof, _, entries = _scenario()
+    obs.metrics().register_provider("memory",
+                                    lambda: obs.ledger().stats())
+    obs.ledger().close_iteration(1, profile=prof,
+                                 swap=_swap(prof, entries))
+    path = str(tmp_path / "m.jsonl")
+    obs.metrics().write_jsonl(path)
+    ms = obs.validate_metrics_jsonl(
+        path, require_gauges=("memory.realized_peak", "memory.peak_error"),
+        require_providers=("memory",))
+    assert ms["snapshots"] == 1
+    with pytest.raises(ValueError, match="missing provider"):
+        obs.validate_metrics_jsonl(path, require_providers=("absent",))
+
+
+def test_report_cli_renders_postmortem_and_gates(tmp_path, capsys):
+    prof, _, entries = _scenario()
+    swap = _swap(prof, entries)
+    led = obs.ledger()
+    obs.metrics().register_provider("memory", lambda: led.stats())
+    audit_path = str(tmp_path / "a.jsonl")
+    obs.audit().attach_file(audit_path)
+    for e in entries:
+        led.note_transfer("out", TC_POLICY_SWAP, _tag(e), e.nbytes,
+                          release_op=e.swap_out_done_op)
+    led.close_iteration(1, profile=prof, swap=swap,
+                        budget=swap.projected_peak * 2)
+    trace = str(tmp_path / "t.trace.json")
+    obs.export_chrome_trace(trace, obs.tracer(),
+                            counters=led.counter_tracks())
+    metrics = str(tmp_path / "m.jsonl")
+    obs.metrics().write_jsonl(metrics)
+    obs.audit().detach_file()
+    out_md = str(tmp_path / "report.md")
+    out_js = str(tmp_path / "report.json")
+    rc = report_main(["--trace", trace, "--metrics", metrics,
+                      "--audit", audit_path, "--out", out_md,
+                      "--json", out_js, "--check-peak-error", "0.10"])
+    assert rc == 0
+    md = open(out_md).read()
+    assert "# Run post-mortem" in md
+    assert "predicted vs realized" in md
+    rep = json.load(open(out_js))
+    assert rep["memory"]["max_abs_peak_error"] == 0.0
+    assert set(rep["trace"]["ledger_tracks_present"]) == set(LEDGER_TRACKS)
+    assert rep["audit"]["memory"].get("memory.peak") == 1
+
+
+def test_report_gate_fails_without_scored_iterations(tmp_path, capsys):
+    # snapshots exist but carry no memory.peak_error series — the gate
+    # must fail loudly instead of passing on a run that never scored
+    metrics = str(tmp_path / "m.jsonl")
+    obs.metrics().gauge("overlap_efficiency", 0.9)
+    obs.metrics().write_jsonl(metrics)
+    rc = report_main(["--metrics", metrics, "--out",
+                      str(tmp_path / "r.md"), "--check-peak-error", "0.10"])
+    assert rc == 2
+    assert "no memory.peak_error points" in capsys.readouterr().err
+
+
+def test_runtime_mirrored_iterations_score_zero_error(llama_profile):
+    """End-to-end through the runtime: the executed policy's mirrored
+    policy_swap traffic feeds the ledger, and a clean iteration (every
+    D2H retires at its promised release op) scores realized ==
+    ``SwapPolicy.projected_peak`` — error exactly 0."""
+    from repro.common.config import ChameleonConfig
+    from repro.core.memtrace import build_timeline
+    from repro.core.policy import generate_policy
+    from repro.core.runtime import ChameleonRuntime
+
+    prof, _ = llama_profile
+    tl = build_timeline(prof)
+    rt = ChameleonRuntime(ChameleonConfig(), lambda pol: (lambda x: x))
+    pol = generate_policy(prof, ChameleonConfig(groups_per_phase=8),
+                          int(tl.peak * 0.7), timeline=tl)
+    rt.applied = rt.executor.lower(pol, prof)
+    rt.executor.bind_release_points(rt.applied, rt.hostmem.engine)
+    rt.profile = prof
+    for _ in range(3):
+        rt.end_iteration(0.01)
+    led = obs.ledger()
+    assert led.n_iterations == 3
+    last = led.last()
+    assert last["realized_peak"] == pol.projected_peak
+    assert last["peak_error"] == 0.0
+    assert last["n_failed"] == 0
+    assert last["conservation"]["ok"]       # mirror slabs all recycled
+    sb = led.scoreboard()
+    assert sb["n"] == 3 and sb["max_abs_error"] == 0.0
+    assert rt.stats()["obs"]["memory"]["iterations"] == 3
+    # the counter tracks carry points for all four lanes after a real run
+    tracks = led.counter_tracks()
+    assert all(tracks[name] for name in LEDGER_TRACKS)

@@ -226,7 +226,11 @@ def test_metrics_jsonl_roundtrip(tmp_path):
     reg.gauge("g", 1.5)
     reg.write_jsonl(p)
     reg.write_jsonl(p)
-    assert validate_metrics_jsonl(p) == {"snapshots": 2}
+    assert validate_metrics_jsonl(p) == {"snapshots": 2, "gauges": ["g"],
+                                         "providers": []}
+    assert validate_metrics_jsonl(p, require_gauges=("g",))["snapshots"] == 2
+    with pytest.raises(ValueError, match="missing gauge"):
+        validate_metrics_jsonl(p, require_gauges=("absent",))
 
 
 # ------------------------------------------------------------ chrome export

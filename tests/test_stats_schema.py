@@ -22,8 +22,9 @@ from repro.runtime.server import Server
 
 POOL_KEYS = {
     "bytes_reserved", "bytes_in_use", "bytes_free", "peak_reserved",
-    "live_blocks", "alloc_count", "reuse_hits", "slab_allocs",
-    "free_count", "hit_rate", "fragmentation",
+    "peak_bytes_in_use", "bytes_alloc_total", "bytes_freed_total",
+    "class_peaks", "live_blocks", "alloc_count", "reuse_hits",
+    "slab_allocs", "free_count", "hit_rate", "fragmentation",
 }
 ENGINE_KEYS = {
     "n_out", "n_in", "bytes_out", "bytes_in", "time_out_s", "time_in_s",
@@ -33,7 +34,20 @@ ENGINE_KEYS = {
 ENGINE_CLASS_KEYS = {
     "n_out", "n_in", "bytes_out", "bytes_in", "time_out_s", "time_in_s",
     "forced_retires", "stall_s", "stall_transfers", "preemptions",
-    "released_at_op", "queue_depth", "queued_bytes",
+    "released_at_op", "queue_depth", "queued_bytes", "hwm_queued_bytes",
+}
+KVSPILL_KEYS = {
+    "n_spills", "n_restores", "n_discards", "bytes_spilled",
+    "bytes_restored", "live_bytes", "hwm_live_bytes", "compression",
+    "bytes_raw", "compression_ratio",
+}
+# the memory-ledger provider / runtime stats()["obs"]["memory"] block
+MEMORY_KEYS = {
+    "iterations", "events", "events_dropped", "leak_suspects",
+    "staged_bytes", "scoreboard", "last",
+}
+SCOREBOARD_KEYS = {
+    "n", "mean_abs_error", "max_abs_error", "worst_step", "last_error",
 }
 SERVER_KEYS = {
     "ticks", "active", "spilled", "queued", "completed", "preemptions",
@@ -52,6 +66,7 @@ def test_hostmem_collect_keys():
     assert {"pool", "engine", "bwmodel", "kvspill"} <= set(stats)
     assert POOL_KEYS <= set(stats["pool"])
     assert ENGINE_KEYS <= set(stats["engine"])
+    assert KVSPILL_KEYS <= set(stats["kvspill"])
     assert set(stats["bwmodel"]) >= {"calibrated", "constant_gbps", "points"}
 
 
@@ -108,11 +123,13 @@ def test_runtime_stats_keys():
     assert set(stats["signature"]) == {"iterations", "changed_slots",
                                        "update_tokens"}
     ob = stats["obs"]
-    assert {"overlap", "tracer", "audit"} <= set(ob)
+    assert {"overlap", "tracer", "audit", "memory"} <= set(ob)
     assert {"last", "mean", "measured", "iterations", "transfer_s",
             "hidden_s"} <= set(ob["overlap"])
     assert {"n_spans", "retained", "dropped", "capacity",
             "names"} <= set(ob["tracer"])
+    assert MEMORY_KEYS <= set(ob["memory"])
+    assert SCOREBOARD_KEYS <= set(ob["memory"]["scoreboard"])
 
 
 def test_registry_snapshot_keys():
