@@ -41,4 +41,43 @@ def run(iters: int = 3):
     t = time_call(qz, big, iters=iters)
     rows.append(("kernel.quantize_1Mx", t,
                  f"compression={big.dtype.itemsize}x->1x+scales"))
+
+    rows.extend(_autotune_rows(iters))
+    return rows
+
+
+def _autotune_rows(iters):
+    """Default-vs-tuned block configs for the swap-path kernels: one
+    measurement sweep per kernel (variant[0] is the hardcoded default),
+    achieved bytes/s + roofline efficiency per row.  Tuned >= default by
+    construction — the winner is the argmax of the same sweep."""
+    from repro.kernels.autotune.device import get_device_spec
+    from repro.kernels.autotune.space import SPACES
+    from repro.kernels.autotune.tuner import default_measure
+
+    spec = get_device_spec()
+    dtype = np.dtype(np.float32)
+    rows = []
+    for kernel in ("quantize", "dequantize"):
+        space = SPACES[kernel]
+        shape = space.default_shape
+        args = space.make_args(shape, dtype)
+        nbytes = space.bytes_moved(shape, dtype)
+        sweep = []
+        for config in space.variants:
+            sec = default_measure(lambda: space.run(args, config),
+                                  iters=iters)
+            sweep.append((nbytes / sec if sec > 0 else 0.0, sec, config))
+        default_bps, default_s, default_cfg = sweep[0]
+        tuned_bps, tuned_s, tuned_cfg = max(sweep, key=lambda r: r[0])
+        for tag, bps, sec, cfg in (
+                ("default", default_bps, default_s, default_cfg),
+                ("tuned", tuned_bps, tuned_s, tuned_cfg)):
+            eff = min(bps / spec.hbm_bw, 1.0)
+            rows.append((f"kernel.{kernel}_{tag}", sec,
+                         f"config={cfg};achieved_gbps={bps / 1e9:.3f};"
+                         f"efficiency={eff:.2e};"
+                         f"speedup_vs_default="
+                         f"{bps / default_bps if default_bps else 1.0:.2f}x"
+                         f";interpret={jax.default_backend() != 'tpu'}"))
     return rows

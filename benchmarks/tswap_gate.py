@@ -1,0 +1,59 @@
+"""t_swap prediction-error gate: autotuned pricing must not be worse.
+
+Compares the memory ledger's predicted-vs-realized peak scoreboard
+(``mean_abs_error``) between two training runs' ``--stats-json`` dumps —
+a baseline (bandwidth-only Eq-3 pricing) and a ``--autotune`` run (link
+efficiency derates the constant, tuned kernels on the spill path).  The
+gate passes when the tuned run's mean absolute peak error is no worse
+than the baseline's plus a small tolerance; nightly runs both and fails
+the job if efficiency-priced ``t_swap`` regresses prediction accuracy.
+
+    python -m benchmarks.tswap_gate baseline.json tuned.json [--tol 0.02]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def scoreboard_error(stats_path: str):
+    """``mean_abs_error`` (and n) out of one --stats-json dump."""
+    with open(stats_path) as f:
+        snap = json.load(f)
+    sb = (snap.get("runtime", {}).get("obs", {})
+          .get("memory", {}).get("scoreboard") or {})
+    return sb.get("mean_abs_error"), sb.get("n", 0)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="--stats-json of the baseline run")
+    ap.add_argument("tuned", help="--stats-json of the --autotune run")
+    ap.add_argument("--tol", type=float, default=0.02,
+                    help="allowed absolute regression in mean |peak "
+                         "error| (fraction of projected peak)")
+    args = ap.parse_args(argv)
+
+    base_err, base_n = scoreboard_error(args.baseline)
+    tuned_err, tuned_n = scoreboard_error(args.tuned)
+    print(f"baseline: mean |peak error| = {base_err} over {base_n} "
+          f"scored iterations")
+    print(f"tuned:    mean |peak error| = {tuned_err} over {tuned_n} "
+          f"scored iterations")
+    if base_err is None or tuned_err is None:
+        # a run with no scored iterations can't regress anything — don't
+        # turn a config hiccup into a false red
+        print("tswap_gate: SKIP (a run has no scored iterations)")
+        return 0
+    if tuned_err <= base_err + args.tol:
+        print(f"tswap_gate: PASS (delta {tuned_err - base_err:+.4f} "
+              f"<= tol {args.tol})")
+        return 0
+    print(f"tswap_gate: FAIL (tuned regressed by "
+          f"{tuned_err - base_err:+.4f} > tol {args.tol})")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

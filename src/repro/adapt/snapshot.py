@@ -38,13 +38,22 @@ class FrozenBacklog:
     the live engine is doing when the worker happens to run."""
 
     def __init__(self, delays: Optional[Dict[str, float]] = None,
-                 default: float = 0.0):
+                 default: float = 0.0,
+                 occupancy: Optional[Dict[str, float]] = None):
         self._delays = dict(delays or {})
         self._default = float(default)
+        self._occupancy = dict(occupancy or {})
 
     def queued_delay(self, cls: str = "policy_swap",
                      kind: str = "swap_out") -> float:
         return self._delays.get(cls, self._default)
+
+    def sustained_contention(self, cls: str = "policy_swap") -> float:
+        """Frozen per-class link occupancy (arrival-rate EWMA × seconds
+        per byte of the *other* classes, as the engine computed it at
+        snapshot time) — keeps async adaptation pricing identical to an
+        inline run against the live engine."""
+        return self._occupancy.get(cls, 0.0)
 
 
 @dataclass
@@ -76,4 +85,7 @@ class AdaptSnapshot:
         """The frozen-contention engine stand-in for policy generation."""
         delays = {c: float(d.get("queued_delay", 0.0))
                   for c, d in self.backlog.items()}
-        return FrozenBacklog(delays, default=self.contention_s)
+        occ = {c: float(d.get("occupancy", 0.0))
+               for c, d in self.backlog.items()}
+        return FrozenBacklog(delays, default=self.contention_s,
+                             occupancy=occ)

@@ -228,8 +228,10 @@ class HostMemConfig:
     # KV-spill payload compression across the host link: "none" keeps the
     # bit-exact raw path; "int8" routes float decode-state rows through the
     # quant_offload kernels (row-wise symmetric int8 + f32 scales), 2-4x
-    # fewer staged bytes at <=0.4% per-row error
-    spill_compression: str = "none"              # none | int8
+    # fewer staged bytes at <=0.4% per-row error; "auto" prices raw vs
+    # int8 per row from the tuned kernel rates + measured link curve
+    # (repro.kernels.autotune) and picks the cheaper one
+    spill_compression: str = "none"              # none | int8 | auto
     spill_compress_min_bytes: int = 1 << 12      # rows below stay raw
     # per-traffic-class depth overrides, e.g. (("checkpoint", 16),) lets a
     # whole checkpoint drain queue without forcing early retires
@@ -241,6 +243,25 @@ class HostMemConfig:
     calibrate: bool = False                      # measure the link at startup
     calibration_sizes: Tuple[int, ...] = HOSTMEM_CALIBRATION_SIZES
     calibration_iters: int = 3
+
+
+@dataclass(frozen=True)
+class AutotuneConfig:
+    """Roofline-driven kernel autotuning for the swap path
+    (repro.kernels.autotune).  When enabled, startup measures each
+    configured Pallas kernel's block-config variants, keeps the one with
+    the highest achieved fraction of the memory-bandwidth roofline, and
+    persists winners in a schema-versioned cache keyed by
+    ``(kernel, shape-bucket, dtype, device_kind)`` — a warm cache means
+    restart reuses tuned configs with zero re-measurement.  The measured
+    link efficiency also derates the simulator's Eq-3 constant."""
+    enabled: bool = False
+    cache_dir: str = ""                          # "" -> in-memory only
+    iters: int = 3                               # timing reps per variant
+    device_kind: str = "tpu_v5e"                 # autotune.device registry key
+    # kernels to tune at startup; flash_attention / ssd_scan can be added
+    # where their tuning cost is worth it
+    kernels: Tuple[str, ...] = ("quantize", "dequantize")
 
 
 @dataclass(frozen=True)
@@ -381,6 +402,7 @@ class ChameleonConfig:
     peak_flops: float = 197e12                   # v5e bf16
     hbm_gbps: float = 819.0
     hostmem: HostMemConfig = HostMemConfig()     # host-memory tier (repro.hostmem)
+    autotune: AutotuneConfig = AutotuneConfig()  # kernel autotuner (repro.kernels.autotune)
     policystore: PolicyStoreConfig = PolicyStoreConfig()  # repro.policystore
     adapt: AdaptConfig = AdaptConfig()           # adaptation placement (repro.adapt)
     resilience: ResilienceConfig = ResilienceConfig()  # fault recovery (repro.faults)

@@ -38,6 +38,7 @@ class SwapPolicy:
     n_ops: int
     fingerprint: str = ""
     contention_s: float = 0.0      # link backlog priced at generation time
+    occupancy: float = 0.0         # sustained other-class link occupancy
 
     def __post_init__(self):
         sites = sorted({(e.site, e.layer) for e in self.entries})
@@ -148,7 +149,8 @@ def generate_policy(prof: ProfileData, cfg: ChameleonConfig,
 
     pol = SwapPolicy(entries, projected, tl.peak, budget,
                      sim.stall_time, prof.t_iter, prof.n_ops,
-                     contention_s=sim.contention_s)
+                     contention_s=sim.contention_s,
+                     occupancy=sim.occupancy)
     if engine is not None and register_free_times:  # hostmem free-time hand-off
         pol.register_free_times(engine)
     return pol

@@ -600,7 +600,8 @@ class ChameleonRuntime:
                         full.swap.baseline_peak, full.swap.budget,
                         full.swap.stall_time, full.swap.t_iter,
                         full.swap.n_ops,
-                        contention_s=full.swap.contention_s)
+                        contention_s=full.swap.contention_s,
+                        occupancy=getattr(full.swap, "occupancy", 0.0))
                     applied = self.executor.lower(swap, prof)
         if applied is None and rung in (RUNG_TRIMMED, RUNG_CONSERVATIVE):
             # conservative WarmUp rung: the Algo-3 passive fit — no

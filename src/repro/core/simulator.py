@@ -111,9 +111,22 @@ class Simulator:
         # budget of the earliest logical layers
         self.contention_s = (engine.queued_delay() if engine is not None
                              else 0.0)
+        # sustained contention: the engine's per-class arrival-rate EWMA
+        # gives the fraction of link time other traffic classes occupy in
+        # steady state — a *rate*, not the point-in-time backlog above
+        # (which only sees what happens to be queued at generation time)
+        occ = 0.0
+        if engine is not None:
+            sc = getattr(engine, "sustained_contention", None)
+            if sc is not None:
+                occ = float(sc())
+        self.occupancy = occ
         self.layers = self._build_layers()
         self._peak_layer = self.layer_of(self.peak_op)
         self._charge_contention()
+        if occ > 0.0 and self._remaining.size:
+            # every overlap window loses the sustained-traffic fraction
+            self._remaining *= (1.0 - occ)
         self.stall_time = 0.0
 
     def _charge_contention(self) -> None:
@@ -170,7 +183,10 @@ class Simulator:
             if self.bwmodel is not None and self.bwmodel.is_calibrated:
                 ts = self.bwmodel.transfer_time(nbytes)   # measured curve
             else:
-                ts = nbytes / self.bandwidth              # Eq. 3 constant
+                # Eq. 3 constant, derated by the autotuner's measured
+                # link efficiency when a bandwidth model carries one
+                eff = getattr(self.bwmodel, "link_efficiency", 1.0)
+                ts = nbytes / (self.bandwidth * eff)
             self._tswap_cache[nbytes] = ts
         return ts
 

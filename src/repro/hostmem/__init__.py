@@ -46,10 +46,16 @@ class HostMemTier:
                                      bwmodel=self.bwmodel,
                                      class_depths=dict(self.cfg.class_depths),
                                      resilience=resilience)
+        self.autotuner = None        # set by autotune()
+        advisor = None
+        if self.cfg.spill_compression == "auto":
+            from repro.kernels.autotune.advisor import CompressionAdvisor
+            advisor = CompressionAdvisor(bwmodel=self.bwmodel)
         self.kvspill = KVSpillManager(
             self.pool, self.engine,
             compression=self.cfg.spill_compression,
-            compress_min_bytes=self.cfg.spill_compress_min_bytes)
+            compress_min_bytes=self.cfg.spill_compress_min_bytes,
+            advisor=advisor)
         if self.cfg.calibrate:
             self.calibrate()
 
@@ -58,8 +64,43 @@ class HostMemTier:
         """Build the tier a ChameleonConfig asks for (None when disabled)."""
         if not ccfg.hostmem.enabled:
             return None
-        return cls(ccfg.hostmem, constant_gbps=ccfg.host_link_gbps,
+        tier = cls(ccfg.hostmem, constant_gbps=ccfg.host_link_gbps,
                    resilience=ccfg.resilience)
+        if ccfg.autotune.enabled:
+            tier.autotune(ccfg.autotune)
+        return tier
+
+    def autotune(self, atcfg=None, *, device_kind=None):
+        """Tune the swap-path kernels against the roofline and wire the
+        results into pricing (repro.kernels.autotune).
+
+        Loads the cache (warm restart = zero re-measurement), measures
+        any missing kernels, installs winners into the process-wide tuned
+        table the kernel ``ops`` wrappers consult, derates the bandwidth
+        model's uncalibrated fallback by the measured link efficiency,
+        points the kv-spill compression advisor at the tuned rates, and
+        persists cache + bandwidth snapshot atomically.  Returns the
+        :class:`~repro.kernels.autotune.tuner.Autotuner`."""
+        from repro.common.config import AutotuneConfig
+        from repro.kernels.autotune import (Autotuner, AutotuneCache,
+                                            get_device_spec, install_cache)
+        atcfg = atcfg or AutotuneConfig(enabled=True)
+        kind = device_kind or atcfg.device_kind
+        cache = (AutotuneCache.load(atcfg.cache_dir, device_kind=kind)
+                 if atcfg.cache_dir else AutotuneCache(device_kind=kind))
+        tuner = Autotuner(cache=cache, spec=get_device_spec(kind),
+                          iters=atcfg.iters)
+        tuner.tune_all(atcfg.kernels)
+        eff = tuner.link_efficiency(self.bwmodel)
+        self.bwmodel.set_link_efficiency(eff)
+        cache.bwmodel = self.bwmodel.to_dict()
+        if atcfg.cache_dir:
+            cache.save()
+        install_cache(cache)
+        if self.kvspill.advisor is not None:
+            self.kvspill.advisor.cache = cache
+        self.autotuner = tuner
+        return tuner
 
     def calibrate(self, sizes=None, iters=None) -> "BandwidthModel":
         """Calibration transfers through the *production* path: each size

@@ -35,8 +35,15 @@ EMA = 0.2                        # weight of a new online observation
 
 
 class BandwidthModel:
-    def __init__(self, constant_gbps: float = 32.0):
+    def __init__(self, constant_gbps: float = 32.0,
+                 link_efficiency: float = 1.0):
         self.constant_gbps = constant_gbps
+        # achieved-vs-peak host-link efficiency measured by the kernel
+        # autotuner (repro.kernels.autotune).  It scales ONLY the
+        # uncalibrated constant fallback: the calibrated curve is already
+        # a measurement, so applying it there would double-count.  1.0
+        # reproduces the paper's nominal-link pricing byte-for-byte.
+        self.link_efficiency = min(max(link_efficiency, 1e-3), 1.0)
         # log2-size bucket -> (representative size, ema seconds, n samples)
         self._buckets: Dict[int, Tuple[int, float, int]] = {}
         self._curve_cache: Optional[List[Tuple[int, float]]] = None
@@ -97,7 +104,8 @@ class BandwidthModel:
         if nbytes <= 0:
             return 0.0
         if not self.is_calibrated:
-            return nbytes / (self.constant_gbps * 1e9)      # Eq. 3 fallback
+            # Eq. 3 fallback, derated by the measured link efficiency
+            return nbytes / (self.constant_gbps * 1e9 * self.link_efficiency)
         curve = self._curve()
         lo_s, lo_t = curve[0]
         hi_s, hi_t = curve[-1]
@@ -121,9 +129,13 @@ class BandwidthModel:
         """[(size, seconds, effective GB/s)] — for reports and docs."""
         return [(s, t, s / t / 1e9) for s, t in self._curve()]
 
+    def set_link_efficiency(self, eff: float) -> None:
+        self.link_efficiency = min(max(float(eff), 1e-3), 1.0)
+
     def to_dict(self) -> dict:
         with self._lock:
             return {"constant_gbps": self.constant_gbps,
+                    "link_efficiency": self.link_efficiency,
                     "samples": [(s, t, n)
                                 for s, t, n in self._buckets.values()]}
 
@@ -135,7 +147,8 @@ class BandwidthModel:
 
     @classmethod
     def from_dict(cls, d: dict) -> "BandwidthModel":
-        m = cls(d.get("constant_gbps", 32.0))
+        m = cls(d.get("constant_gbps", 32.0),
+                link_efficiency=d.get("link_efficiency", 1.0))
         for s, t, n in d.get("samples", []):
             b = int(math.log2(s))
             m._buckets[b] = (int(s), float(t), int(n))

@@ -75,6 +75,11 @@ PRIORITY: Dict[str, int] = {c: i for i, c in enumerate(TRAFFIC_CLASSES)}
 
 _EST_FALLBACK_GBPS = 32.0        # queued_delay estimate without a bwmodel
 
+# arrival-rate EWMA time constant: how much enqueue history "sustained
+# contention" remembers.  ~2 s spans several iterations of the reduced
+# configs while forgetting a finished drain within a few constants.
+ARRIVAL_TAU_S = 2.0
+
 
 @dataclass
 class TransferEvent:
@@ -163,6 +168,17 @@ class TransferEngine:
             (c, k): collections.deque()
             for c in TRAFFIC_CLASSES for k in (SWAP_OUT, SWAP_IN)}
         self._eid = 0
+        # per-class arrival-rate EWMA (bytes/s enqueued): exponential
+        # decay over ARRIVAL_TAU_S, updated at every submit — the input
+        # to sustained_contention(), which prices steady other-class
+        # traffic into policy generation instead of only the
+        # point-in-time backlog queued_delay() sees
+        self._arr_rate_bps: Dict[str, float] = {c: 0.0
+                                                for c in TRAFFIC_CLASSES}
+        self._arr_mean_bytes: Dict[str, float] = {c: 0.0
+                                                  for c in TRAFFIC_CLASSES}
+        self._arr_last_t: Dict[str, float] = {c: 0.0
+                                              for c in TRAFFIC_CLASSES}
         self._planned_release: Dict[str, int] = {}
         self._lock = threading.RLock()
         self.current_op = -1             # execution-path op cursor
@@ -257,7 +273,22 @@ class TransferEngine:
             self._enqueue(ev)
         return ev
 
+    def _note_arrival(self, cls: str, nbytes: int, now: float) -> None:
+        """Decay-then-add rate update: each arrival contributes
+        ``nbytes / tau`` and decays exponentially, so the estimator
+        converges to the true sustained bytes/s of a steady stream."""
+        last = self._arr_last_t[cls]
+        rate = self._arr_rate_bps[cls]
+        if last > 0.0:
+            rate *= float(np.exp(-(now - last) / ARRIVAL_TAU_S))
+        self._arr_rate_bps[cls] = rate + nbytes / ARRIVAL_TAU_S
+        mean = self._arr_mean_bytes[cls]
+        self._arr_mean_bytes[cls] = (nbytes if mean == 0.0
+                                     else 0.8 * mean + 0.2 * nbytes)
+        self._arr_last_t[cls] = now
+
     def _enqueue(self, ev: TransferEvent) -> None:
+        self._note_arrival(ev.cls, ev.nbytes, ev.t_submit)
         q = self._pending[(ev.cls, ev.kind)]
         q.append(ev)
         cc = self.by_class[ev.cls]
@@ -593,6 +624,46 @@ class TransferEngine:
                     hol = max(hol, self._est_seconds(q[0].nbytes))
         return ahead + hol
 
+    def arrival_rate_bps(self, cls: str, now: Optional[float] = None
+                         ) -> float:
+        """Current EWMA of bytes/s enqueued on ``cls`` (decayed to now)."""
+        self._check_class(cls)
+        with self._lock:
+            last = self._arr_last_t[cls]
+            rate = self._arr_rate_bps[cls]
+            if last <= 0.0 or rate <= 0.0:
+                return 0.0
+            now = now if now is not None else time.perf_counter()
+            return rate * float(np.exp(-max(now - last, 0.0)
+                                       / ARRIVAL_TAU_S))
+
+    def sustained_contention(self, cls: str = TC_POLICY_SWAP) -> float:
+        """Fraction of link time *other* traffic classes occupy in steady
+        state: Σ arrival_rate × est-seconds-per-byte over every class but
+        ``cls``, clamped to [0, 0.95].  Scheduling is strict-priority at
+        transfer granularity, so sustained lower-priority traffic still
+        costs ``cls`` one head-of-line block per dispatch — in steady
+        state that erosion approaches the other classes' link occupancy,
+        which is what this prices (the docs/hostmem.md carried-over
+        item: a rate, not the backlog snapshot ``queued_delay`` sees)."""
+        self._check_class(cls)
+        now = time.perf_counter()
+        occ = 0.0
+        with self._lock:
+            for c in TRAFFIC_CLASSES:
+                if c == cls:
+                    continue
+                last = self._arr_last_t[c]
+                rate = self._arr_rate_bps[c]
+                if last <= 0.0 or rate <= 0.0:
+                    continue
+                rate *= float(np.exp(-max(now - last, 0.0)
+                                     / ARRIVAL_TAU_S))
+                mean = self._arr_mean_bytes[c] or 1.0
+                spb = self._est_seconds(int(mean)) / mean
+                occ += rate * spb
+        return min(max(occ, 0.0), 0.95)
+
     def queued_bytes(self, cls: str) -> int:
         """Bytes sitting in ``cls``'s queues right now — the backlog the
         simulator prices via :meth:`queued_delay`, exposed as a gauge."""
@@ -609,6 +680,7 @@ class TransferEngine:
         ``queued_delay`` here is the same estimate :meth:`queued_delay`
         returns, computed for every class under a single lock hold."""
         out: Dict[str, dict] = {}
+        now = time.perf_counter()
         with self._lock:
             est = {c: sum(self._est_seconds(e.nbytes)
                           for e in self._pending[(c, SWAP_OUT)])
@@ -616,18 +688,33 @@ class TransferEngine:
             heads = {c: (self._est_seconds(self._pending[(c, SWAP_OUT)][0].nbytes)
                          if self._pending[(c, SWAP_OUT)] else 0.0)
                      for c in TRAFFIC_CLASSES}
+            # per-class link occupancy (arrival-rate EWMA × seconds/byte),
+            # decayed to now — frozen alongside the backlog so adaptation
+            # prices sustained contention, not just the point-in-time queue
+            load = {}
+            for c in TRAFFIC_CLASSES:
+                last, rate = self._arr_last_t[c], self._arr_rate_bps[c]
+                if last <= 0.0 or rate <= 0.0:
+                    load[c] = (0.0, 0.0)
+                    continue
+                rate *= float(np.exp(-max(now - last, 0.0) / ARRIVAL_TAU_S))
+                mean = self._arr_mean_bytes[c] or 1.0
+                load[c] = (rate, rate * self._est_seconds(int(mean)) / mean)
             for cls in TRAFFIC_CLASSES:
                 pri = PRIORITY[cls]
                 ahead = sum(est[c] for c in TRAFFIC_CLASSES
                             if PRIORITY[c] <= pri)
                 hol = max((heads[c] for c in TRAFFIC_CLASSES
                            if PRIORITY[c] > pri), default=0.0)
+                occ = sum(load[c][1] for c in TRAFFIC_CLASSES if c != cls)
                 out[cls] = {
                     "queued_delay": ahead + hol,
                     "queue_depth": sum(len(self._pending[(cls, k)])
                                        for k in (SWAP_OUT, SWAP_IN)),
                     "queued_bytes": sum(e.nbytes for k in (SWAP_OUT, SWAP_IN)
                                         for e in self._pending[(cls, k)]),
+                    "arrival_bps": load[cls][0],
+                    "occupancy": min(max(occ, 0.0), 0.95),
                 }
         return out
 
@@ -647,6 +734,7 @@ class TransferEngine:
                 d["queued_bytes"] = sum(
                     e.nbytes for k in (SWAP_OUT, SWAP_IN)
                     for e in self._pending[(c, k)])
+                d["arrival_bps"] = self._arr_rate_bps[c]
                 total_queued += d["queued_bytes"]
                 classes[c] = d
             return {

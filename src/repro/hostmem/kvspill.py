@@ -21,7 +21,11 @@ instead cross the link as row-quantized int8 payloads plus f32 scales
 (the ``quant_offload`` kernels — the same path
 ``offload_mode="compressed"`` uses for activations), cutting staged
 bytes 2-4x at <=0.4% per-row relative error; integer fields and small
-rows stay raw.
+rows stay raw.  ``compression="auto"`` makes raw-vs-int8 a *priced*
+decision: a :class:`~repro.kernels.autotune.advisor.CompressionAdvisor`
+compares measured link time for the raw row against quantize + smaller
+transfer + dequantize at the tuned kernel rates, per row shape (falls
+back to the static int8 rule when no advisor/tuned rates exist).
 
 Lifetime rules (regression-tested): ``restore`` *consumes* the spill
 image (the staged event is cleared, its slab freed by the H2D copy), and
@@ -42,7 +46,7 @@ from repro.hostmem.pool import HostMemError, PinnedSlabPool
 STATE_FIELDS = ("attn_k", "attn_v", "ssm_conv", "ssm_ssd",
                 "cross_k", "cross_v")
 
-SPILL_COMPRESSIONS = ("none", "int8")
+SPILL_COMPRESSIONS = ("none", "int8", "auto")
 
 
 @dataclass
@@ -75,7 +79,8 @@ class SpilledSlot:
 class KVSpillManager:
     def __init__(self, pool: PinnedSlabPool, engine: TransferEngine,
                  compression: str = "none",
-                 compress_min_bytes: int = 1 << 12):
+                 compress_min_bytes: int = 1 << 12,
+                 advisor=None):
         if compression not in SPILL_COMPRESSIONS:
             raise ValueError(f"unknown spill compression {compression!r}; "
                              f"expected one of {SPILL_COMPRESSIONS}")
@@ -83,6 +88,10 @@ class KVSpillManager:
         self.engine = engine
         self.compression = compression
         self.compress_min_bytes = compress_min_bytes
+        # "auto": a repro.kernels.autotune.advisor.CompressionAdvisor that
+        # prices raw-vs-int8 per row from the tuned kernel rates and the
+        # measured link curve; without one, auto degrades to "int8"
+        self.advisor = advisor
         self.n_spills = self.n_restores = self.n_discards = 0
         self.bytes_spilled = self.bytes_restored = 0
         self.live_bytes = 0          # spill images currently host-resident
@@ -90,12 +99,21 @@ class KVSpillManager:
         self.bytes_raw = 0             # pre-compression row bytes
 
     # -------------------------------------------------- int8 field packing
-    def _compressible(self, arr, row_nbytes: int) -> bool:
+    def _compressible(self, arr, row_nbytes: int, row_shape=()) -> bool:
         import jax.numpy as jnp
-        return (self.compression == "int8"
-                and row_nbytes >= self.compress_min_bytes
-                and jnp.issubdtype(arr.dtype, jnp.floating)
-                and jnp.dtype(arr.dtype).itemsize > 1)
+        if (self.compression not in ("int8", "auto")
+                or row_nbytes < self.compress_min_bytes
+                or not jnp.issubdtype(arr.dtype, jnp.floating)
+                or jnp.dtype(arr.dtype).itemsize <= 1):
+            return False
+        if self.compression == "int8" or self.advisor is None:
+            return True              # static rule (auto w/o advisor too)
+        from repro.kernels.autotune.advisor import COMPRESS_INT8
+        itemsize = int(jnp.dtype(arr.dtype).itemsize)
+        rows = int(np.prod(row_shape[:-1])) if len(row_shape) > 1 else 1
+        choice, _ = self.advisor.decide(row_nbytes, itemsize, rows,
+                                        cls=TC_KV_SPILL, tag="kvspill")
+        return choice == COMPRESS_INT8
 
     @staticmethod
     def _quantize_row(row: np.ndarray):
@@ -125,7 +143,7 @@ class KVSpillManager:
                 continue
             row = np.ascontiguousarray(np.asarray(arr[:, slot]))
             self.bytes_raw += row.nbytes
-            if self._compressible(arr, row.nbytes):
+            if self._compressible(arr, row.nbytes, row.shape):
                 q, s = self._quantize_row(row)
                 sp.layout.append(FieldSlice(
                     name, off, q.nbytes, q.shape, q.dtype, kind="int8",
@@ -216,4 +234,6 @@ class KVSpillManager:
                 "compression": self.compression,
                 "bytes_raw": self.bytes_raw,
                 "compression_ratio": (self.bytes_raw / self.bytes_spilled
-                                      if self.bytes_spilled else 1.0)}
+                                      if self.bytes_spilled else 1.0),
+                "advisor": (self.advisor.stats()
+                            if self.advisor is not None else None)}

@@ -1,0 +1,56 @@
+"""Device roofline specs (one source of truth).
+
+``launch/roofline.py`` and the kernel autotuner used to carry their own
+copies of the TPU v5e hardware constants; both now read one
+:class:`DeviceSpec` selected by device kind, so the dry-run roofline
+report and the autotuner's achieved-vs-peak efficiency are judged
+against the same peaks.  The registry covers the targets the repo talks
+about; unknown kinds fall back to the v5e numbers (the paper's target)
+rather than crashing — an autotune cache records which kind it was
+measured on, so a mismatched spec is visible, never silent.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    """Peak rates used as roofline denominators (bytes/s, FLOP/s)."""
+    kind: str
+    peak_flops: float            # bf16 matmul peak
+    hbm_bw: float                # HBM bytes/s
+    ici_bw: float                # per-link interconnect bytes/s
+    host_bw: float               # host<->device link bytes/s
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+DEFAULT_DEVICE_KIND = "tpu_v5e"
+
+DEVICE_SPECS: Dict[str, DeviceSpec] = {
+    # paper target: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI,
+    # 32 GB/s host link (the Eq. 3 constant)
+    "tpu_v5e": DeviceSpec("tpu_v5e", 197e12, 819e9, 50e9, 32e9),
+    "tpu_v5p": DeviceSpec("tpu_v5p", 459e12, 2765e9, 100e9, 32e9),
+    "tpu_v4": DeviceSpec("tpu_v4", 275e12, 1228e9, 50e9, 32e9),
+    # CPU interpret-mode runs: the peaks are nominal (one memory channel
+    # class); efficiencies measured against them are tiny and honest
+    "cpu": DeviceSpec("cpu", 1e12, 50e9, 10e9, 32e9),
+}
+
+
+def get_device_spec(kind: Optional[str] = None) -> DeviceSpec:
+    """Spec for ``kind`` (default: the paper's TPU v5e target).  Unknown
+    kinds fall back to the default spec's numbers under the asked-for
+    name so cache keys still record what the caller believed it had."""
+    if not kind:
+        return DEVICE_SPECS[DEFAULT_DEVICE_KIND]
+    spec = DEVICE_SPECS.get(kind)
+    if spec is None:
+        base = DEVICE_SPECS[DEFAULT_DEVICE_KIND]
+        return DeviceSpec(kind, base.peak_flops, base.hbm_bw,
+                          base.ici_bw, base.host_bw)
+    return spec

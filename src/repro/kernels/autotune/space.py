@@ -1,0 +1,187 @@
+"""Per-kernel block-config search spaces + roofline byte accounting.
+
+One :class:`KernelSpace` per swap-path Pallas kernel describes what the
+autotuner can vary, how to build representative arguments, how to run a
+variant, what the numerical oracle is (``kernels/*/ref.py``), and how
+many bytes one call *must* move — the SNIPPETS-style dtype-bytes
+accounting that turns a measured wall time into an achieved fraction of
+the memory-bandwidth roofline (``bytes_moved / t / peak_bw``).
+
+The run callables are backend-agnostic: they call the same wrappers
+production uses (interpret mode off-TPU), so real TPU timing drops in
+with no harness change.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class KernelSpace:
+    """One kernel's tunable surface."""
+    name: str
+    variants: Tuple[dict, ...]           # candidate configs, default first
+    default: dict
+    make_args: Callable[[Sequence[int], object], tuple]
+    run: Callable[[tuple, dict], object]
+    ref: Callable[[tuple], object]
+    bytes_moved: Callable[[Sequence[int], object], int]
+    default_shape: Tuple[int, ...] = ()
+
+
+def _itemsize(dtype) -> int:
+    return int(np.dtype(dtype).itemsize)
+
+
+# ------------------------------------------------------- quant_offload
+def _quant_args(shape, dtype):
+    import jax.numpy as jnp
+    R, F = shape
+    rng = np.random.RandomState(0)
+    return (jnp.asarray(rng.randn(R, F) * 0.5, dtype),)
+
+
+def _quant_run(args, config):
+    from repro.kernels.quant_offload import kernel as K
+    from repro.kernels.quant_offload.ops import _default_interpret
+    return K.quantize_fwd(args[0], block_rows=config["block_rows"],
+                          interpret=_default_interpret())
+
+
+def _quant_ref(args):
+    from repro.kernels.quant_offload.ref import quantize_ref
+    return quantize_ref(args[0])
+
+
+def _quant_bytes(shape, dtype) -> int:
+    R, F = shape
+    # read x (R,F,itemsize) + write int8 payload (R,F) + f32 scales (R,1)
+    return R * F * _itemsize(dtype) + R * F + R * 4
+
+
+def _dequant_args(shape, dtype):
+    q, s = _quant_ref(_quant_args(shape, dtype))
+    return (q, s, np.dtype(dtype))
+
+
+def _dequant_run(args, config):
+    from repro.kernels.quant_offload import kernel as K
+    from repro.kernels.quant_offload.ops import _default_interpret
+    q, s, out_dtype = args
+    return K.dequantize_fwd(q, s, out_dtype,
+                            block_rows=config["block_rows"],
+                            interpret=_default_interpret())
+
+
+def _dequant_ref(args):
+    from repro.kernels.quant_offload.ref import dequantize_ref
+    return dequantize_ref(*args)
+
+
+def _dequant_bytes(shape, dtype) -> int:
+    R, F = shape
+    return R * F + R * 4 + R * F * _itemsize(dtype)
+
+
+# ----------------------------------------------------- flash_attention
+def _flash_args(shape, dtype):
+    import jax.numpy as jnp
+    B, S, H, D = shape
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, S, H, D) * 0.3, dtype)
+    k = jnp.asarray(rng.randn(B, S, max(H // 2, 1), D) * 0.3, dtype)
+    v = jnp.asarray(rng.randn(B, S, max(H // 2, 1), D) * 0.3, dtype)
+    return (q, k, v)
+
+
+def _flash_run(args, config):
+    from repro.kernels.flash_attention.ops import flash_attention
+    return flash_attention(*args, causal=True,
+                           block_q=config["block_q"],
+                           block_k=config["block_k"])
+
+
+def _flash_ref(args):
+    import jax.numpy as jnp
+    import math
+    from repro.kernels.flash_attention.ref import attention_ref
+    q, k, v = args
+    out = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), causal=True,
+                        sm_scale=1.0 / math.sqrt(q.shape[-1]))
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _flash_bytes(shape, dtype) -> int:
+    B, S, H, D = shape
+    kh = max(H // 2, 1)
+    it = _itemsize(dtype)
+    # q + k + v reads + o write: the memory-roofline lower bound (the
+    # whole point of flash is that nothing quadratic touches HBM)
+    return (B * S * H * D + 2 * B * S * kh * D + B * S * H * D) * it
+
+
+# ------------------------------------------------------------ ssd_scan
+def _ssd_args(shape, dtype):
+    import jax.numpy as jnp
+    B, S, H, P = shape
+    N = 64
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(B, S, H, P) * 0.5, dtype)
+    dt = jnp.asarray(np.abs(rng.randn(B, S, H)) * 0.1, dtype)
+    A = -jnp.asarray(np.abs(rng.randn(H)) + 0.5, dtype)
+    Bm = jnp.asarray(rng.randn(B, S, N) * 0.3, dtype)
+    Cm = jnp.asarray(rng.randn(B, S, N) * 0.3, dtype)
+    return (x, dt, A, Bm, Cm)
+
+
+def _ssd_run(args, config):
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    return ssd_scan(*args, chunk=config["chunk"])
+
+
+def _ssd_ref(args):
+    import jax.numpy as jnp
+    from repro.kernels.ssd_scan.ref import ssd_ref
+    x, dt, A, Bm, Cm = args
+    y = ssd_ref(jnp.transpose(x, (0, 2, 1, 3)),
+                jnp.transpose(dt, (0, 2, 1)), A, Bm, Cm)
+    return jnp.transpose(y, (0, 2, 1, 3))
+
+
+def _ssd_bytes(shape, dtype) -> int:
+    B, S, H, P = shape
+    N = 64
+    it = _itemsize(dtype)
+    # x + dt + Bm + Cm reads, y write (A is negligible)
+    return (2 * B * S * H * P + B * S * H + 2 * B * S * N) * it
+
+
+def _cfgs(key, values) -> Tuple[dict, ...]:
+    return tuple({key: v} for v in values)
+
+
+SPACES: Dict[str, KernelSpace] = {
+    "quantize": KernelSpace(
+        "quantize", _cfgs("block_rows", (256, 64, 128, 512)),
+        {"block_rows": 256}, _quant_args, _quant_run, _quant_ref,
+        _quant_bytes, default_shape=(1024, 1024)),
+    "dequantize": KernelSpace(
+        "dequantize", _cfgs("block_rows", (256, 64, 128, 512)),
+        {"block_rows": 256}, _dequant_args, _dequant_run, _dequant_ref,
+        _dequant_bytes, default_shape=(1024, 1024)),
+    "flash_attention": KernelSpace(
+        "flash_attention",
+        tuple({"block_q": bq, "block_k": bk}
+              for bq in (128, 256) for bk in (128, 256)),
+        {"block_q": 128, "block_k": 128},
+        _flash_args, _flash_run, _flash_ref, _flash_bytes,
+        default_shape=(1, 256, 4, 64)),
+    "ssd_scan": KernelSpace(
+        "ssd_scan", _cfgs("chunk", (256, 64, 128)),
+        {"chunk": 256}, _ssd_args, _ssd_run, _ssd_ref, _ssd_bytes,
+        default_shape=(1, 256, 4, 64)),
+}

@@ -65,10 +65,18 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     sm_scale: Optional[float] = None,
-                    block_q: int = 128, block_k: int = 128):
-    """Model-layout entry point.  q (B,Sq,H,D); k/v (B,Sk,Kh,D)."""
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None):
+    """Model-layout entry point.  q (B,Sq,H,D); k/v (B,Sk,Kh,D).
+    ``block_q``/``block_k`` default to the installed autotune table's
+    winner for this shape (repro.kernels.autotune), else 128."""
     B, Sq, H, D = q.shape
     Sk = k.shape[1]
+    if block_q is None or block_k is None:
+        from repro.kernels.autotune.table import tuned_config
+        cfg = tuned_config("flash_attention", q.shape, q.dtype) or {}
+        block_q = block_q or int(cfg.get("block_q", 128))
+        block_k = block_k or int(cfg.get("block_k", 128))
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(D)
     qt = jnp.swapaxes(q, 1, 2)

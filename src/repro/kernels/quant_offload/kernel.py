@@ -28,36 +28,51 @@ def _dequant_kernel(q_ref, s_ref, x_ref, *, out_dtype):
     x_ref[...] = (q * s_ref[...]).astype(out_dtype)
 
 
+def _pad_rows(x2d, block_rows: int):
+    """Ragged row counts pad up to a whole number of blocks (each row is
+    quantized independently, so zero-filled pad rows cannot leak into
+    real rows); callers slice the pad back off."""
+    R = x2d.shape[0]
+    br = max(min(block_rows, R), 1)
+    pad = (-R) % br
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    return x2d, br, R
+
+
 def quantize_fwd(x2d, *, block_rows: int = 256, interpret: bool = False):
     """x2d (R, F) -> (int8 (R, F), scales (R, 1))."""
     R, F = x2d.shape
-    br = min(block_rows, R)
-    assert R % br == 0, (R, br)
-    grid = (R // br,)
-    return pl.pallas_call(
+    x2d, br, _ = _pad_rows(x2d, block_rows)
+    Rp = x2d.shape[0]
+    q, s = pl.pallas_call(
         _quant_kernel,
-        grid=grid,
+        grid=(Rp // br,),
         in_specs=[pl.BlockSpec((br, F), lambda r: (r, 0))],
         out_specs=[pl.BlockSpec((br, F), lambda r: (r, 0)),
                    pl.BlockSpec((br, 1), lambda r: (r, 0))],
-        out_shape=[jax.ShapeDtypeStruct((R, F), jnp.int8),
-                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((Rp, F), jnp.int8),
+                   jax.ShapeDtypeStruct((Rp, 1), jnp.float32)],
         interpret=interpret,
     )(x2d)
+    return (q[:R], s[:R]) if Rp != R else (q, s)
 
 
 def dequantize_fwd(q2d, scales, out_dtype, *, block_rows: int = 256,
                    interpret: bool = False):
     R, F = q2d.shape
-    br = min(block_rows, R)
-    assert R % br == 0
+    q2d, br, _ = _pad_rows(q2d, block_rows)
+    Rp = q2d.shape[0]
+    if Rp != R:
+        scales = jnp.pad(scales, ((0, Rp - R), (0, 0)))
     kernel = functools.partial(_dequant_kernel, out_dtype=out_dtype)
-    return pl.pallas_call(
+    x = pl.pallas_call(
         kernel,
-        grid=(R // br,),
+        grid=(Rp // br,),
         in_specs=[pl.BlockSpec((br, F), lambda r: (r, 0)),
                   pl.BlockSpec((br, 1), lambda r: (r, 0))],
         out_specs=pl.BlockSpec((br, F), lambda r: (r, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, F), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((Rp, F), out_dtype),
         interpret=interpret,
     )(q2d, scales)
+    return x[:R] if Rp != R else x

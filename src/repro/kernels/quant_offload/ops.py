@@ -28,23 +28,26 @@ def _to2d(x):
     return x.reshape(R, F), x.shape
 
 
-def quantize(x, *, block_rows: int = 256):
+def _tuned_block_rows(kernel: str, shape, dtype, default: int = 256) -> int:
+    from repro.kernels.autotune.table import tuned_config
+    cfg = tuned_config(kernel, shape, dtype)
+    return int(cfg["block_rows"]) if cfg else default
+
+
+def quantize(x, *, block_rows=None):
+    """``block_rows=None`` consults the installed autotune table (see
+    repro.kernels.autotune); kernel-level padding handles ragged R."""
     x2d, shape = _to2d(x)
-    R = x2d.shape[0]
-    br = block_rows
-    while R % br and br > 1:
-        br //= 2
+    br = block_rows or _tuned_block_rows("quantize", x2d.shape, x2d.dtype)
     q, s = K.quantize_fwd(x2d, block_rows=br, interpret=_default_interpret())
     return q.reshape(shape), s.reshape(shape[:-1] + (1,))
 
 
-def dequantize(q, scales, out_dtype):
+def dequantize(q, scales, out_dtype, *, block_rows=None):
     q2d, shape = _to2d(q)
     s2d = scales.reshape(q2d.shape[0], 1)
-    R = q2d.shape[0]
-    br = 256
-    while R % br and br > 1:
-        br //= 2
+    br = block_rows or _tuned_block_rows("dequantize", q2d.shape,
+                                         jnp.dtype(out_dtype))
     x = K.dequantize_fwd(q2d, s2d, jnp.dtype(out_dtype), block_rows=br,
                          interpret=_default_interpret())
     return x.reshape(shape)

@@ -11,9 +11,14 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256):
-    """Model layout: x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,N)."""
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=None):
+    """Model layout: x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,N).
+    ``chunk=None`` consults the installed autotune table, else 256."""
     B, S, H, P = x.shape
+    if chunk is None:
+        from repro.kernels.autotune.table import tuned_config
+        cfg = tuned_config("ssd_scan", x.shape, x.dtype)
+        chunk = int(cfg["chunk"]) if cfg else 256
     pad = (-S) % chunk
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))

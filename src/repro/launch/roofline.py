@@ -23,8 +23,10 @@ handled explicitly:
 
 HBM bytes use the same jaxpr walk (dot operands/outputs + tagged residual
 stores), a post-fusion traffic proxy: elementwise chains fuse into the
-surrounding matmuls on TPU.  Hardware constants (TPU v5e target):
-197 TFLOP/s bf16 · 819 GB/s HBM · ~50 GB/s/link ICI · 32 GB/s host link.
+surrounding matmuls on TPU.  Hardware constants come from the shared
+:class:`~repro.kernels.autotune.device.DeviceSpec` registry (TPU v5e
+default: 197 TFLOP/s bf16 · 819 GB/s HBM · ~50 GB/s/link ICI · 32 GB/s
+host link) — one spec feeds this report and the kernel autotuner.
 """
 from __future__ import annotations
 
@@ -35,10 +37,16 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
-HOST_BW = 32e9
+from repro.kernels.autotune.device import (DEVICE_SPECS, DeviceSpec,
+                                           get_device_spec)
+
+_DEFAULT_SPEC = get_device_spec()
+# module-level aliases kept for existing callers/tests; the spec registry
+# is the source of truth
+PEAK_FLOPS = _DEFAULT_SPEC.peak_flops
+HBM_BW = _DEFAULT_SPEC.hbm_bw
+ICI_BW = _DEFAULT_SPEC.ici_bw
+HOST_BW = _DEFAULT_SPEC.host_bw
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -266,17 +274,18 @@ class RooflineTerms:
     step_time_bound_s: float = 0.0
     mfu_bound: float = 0.0
 
-    def finalize(self):
-        self.compute_s = self.flops_per_chip / PEAK_FLOPS
-        self.memory_s = self.bytes_per_chip / HBM_BW
-        self.collective_s = self.wire_bytes_per_chip / ICI_BW
+    def finalize(self, spec: Optional[DeviceSpec] = None):
+        spec = spec or _DEFAULT_SPEC
+        self.compute_s = self.flops_per_chip / spec.peak_flops
+        self.memory_s = self.bytes_per_chip / spec.hbm_bw
+        self.collective_s = self.wire_bytes_per_chip / spec.ici_bw
         terms = {"compute": self.compute_s, "memory": self.memory_s,
                  "collective": self.collective_s}
         self.bottleneck = max(terms, key=terms.get)
         self.step_time_bound_s = max(terms.values())
         if self.model_flops and self.step_time_bound_s > 0:
             self.mfu_bound = (self.model_flops
-                              / (self.chips * PEAK_FLOPS
+                              / (self.chips * spec.peak_flops
                                  * self.step_time_bound_s))
         if self.flops_per_chip:
             self.useful_flops_ratio = (self.model_flops
@@ -289,7 +298,8 @@ class RooflineTerms:
 
 def analyze(compiled, chips: int, model_flops: float = 0.0,
             hlo_text: Optional[str] = None,
-            step_jaxpr=None) -> RooflineTerms:
+            step_jaxpr=None,
+            device_kind: Optional[str] = None) -> RooflineTerms:
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):      # older JAX: one dict per program
         cost = cost[0] if cost else {}
@@ -313,7 +323,8 @@ def analyze(compiled, chips: int, model_flops: float = 0.0,
         xla_bytes_per_chip=xla_bytes,
         model_flops=model_flops,
     )
-    return terms.finalize()
+    return terms.finalize(get_device_spec(device_kind)
+                          if device_kind else None)
 
 
 def model_flops_train(param_count: int, tokens: int) -> float:

@@ -26,10 +26,19 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--calibrate-link", action="store_true",
                     help="measure the host link before serving")
-    ap.add_argument("--spill-compression", choices=["none", "int8"],
+    ap.add_argument("--spill-compression", choices=["none", "int8", "auto"],
                     default="none",
                     help="int8: KV spill crosses the link row-quantized "
-                         "(2-4x fewer bytes, <=0.4%% per-row error)")
+                         "(2-4x fewer bytes, <=0.4%% per-row error); "
+                         "auto: raw-vs-int8 priced per row from the tuned "
+                         "kernel rates + measured link curve")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune the swap-path kernels against the roofline "
+                         "at startup (repro.kernels.autotune); feeds the "
+                         "auto spill-compression advisor")
+    ap.add_argument("--autotune-cache-dir", default="",
+                    help="persist/reuse tuned configs here (warm cache = "
+                         "zero re-measurement)")
     ap.add_argument("--policy-store-dir", default="",
                     help="attach the shared adaptation cache (read-only "
                          "visibility: cache warmth is reported in stats)")
@@ -62,11 +71,15 @@ def main():
     max_active = args.max_active or args.max_batch
     hostmem = None
     if (max_active > args.max_batch or args.calibrate_link
-            or args.spill_compression != "none"):
+            or args.spill_compression != "none" or args.autotune):
         hostmem = HostMemTier(HostMemConfig(
             spill_compression=args.spill_compression))
         if args.calibrate_link:
             hostmem.calibrate()        # engine-path sweep, not raw device_put
+        if args.autotune:
+            from repro.common.config import AutotuneConfig
+            hostmem.autotune(AutotuneConfig(
+                enabled=True, cache_dir=args.autotune_cache_dir))
     policystore = None
     if args.policy_store_dir:
         from repro.policystore import PolicyStore

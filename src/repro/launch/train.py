@@ -33,6 +33,17 @@ def main():
                          "GenPolicy for recurring sequences)")
     ap.add_argument("--no-policy-store", action="store_true",
                     help="disable the in-memory policy cache too")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune the swap-path Pallas kernels against the "
+                         "memory-bandwidth roofline at startup and price "
+                         "the achieved efficiency into policy generation "
+                         "(repro.kernels.autotune)")
+    ap.add_argument("--autotune-cache-dir", default="",
+                    help="persist tuned configs + bandwidth snapshot here "
+                         "(schema-versioned autotune.json; a warm cache "
+                         "means restart re-measures nothing).  Defaults "
+                         "to <policy-store-dir>/autotune when a policy "
+                         "store dir is set")
     ap.add_argument("--adapt-mode",
                     choices=["inline", "async", "speculative"],
                     default="inline",
@@ -73,8 +84,9 @@ def main():
 
     import jax
     import repro.configs as C
-    from repro.common.config import (AdaptConfig, ChameleonConfig,
-                                     PolicyStoreConfig, TrainConfig)
+    from repro.common.config import (AdaptConfig, AutotuneConfig,
+                                     ChameleonConfig, PolicyStoreConfig,
+                                     TrainConfig)
     from repro.data.synthetic import SyntheticTokens
     from repro.launch.mesh import make_production_mesh
     from repro.runtime.trainer import Trainer
@@ -85,12 +97,18 @@ def main():
     tcfg = TrainConfig(steps=args.steps, checkpoint_dir=args.ckpt_dir,
                        checkpoint_every=max(args.steps // 4, 1),
                        eval_every=max(args.steps // 3, 1))
+    at_dir = args.autotune_cache_dir
+    if args.autotune and not at_dir and args.policy_store_dir:
+        # warm-start colocation: tuned configs restart with the policies
+        at_dir = os.path.join(args.policy_store_dir, "autotune")
     cham = ChameleonConfig(enabled=not args.no_chameleon,
                            hbm_budget_bytes=int(args.budget_gib * 2 ** 30),
                            policystore=PolicyStoreConfig(
                                enabled=not args.no_policy_store,
                                dir=args.policy_store_dir),
-                           adapt=AdaptConfig(mode=args.adapt_mode))
+                           adapt=AdaptConfig(mode=args.adapt_mode),
+                           autotune=AutotuneConfig(
+                               enabled=args.autotune, cache_dir=at_dir))
     mesh = None
     if args.mesh != "none":
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))

@@ -127,7 +127,8 @@ class PolicyRecord:
                     "budget": int(swap.budget),
                     "stall_time": float(swap.stall_time),
                     "t_iter": float(swap.t_iter), "n_ops": int(swap.n_ops),
-                    "contention_s": float(swap.contention_s)}
+                    "contention_s": float(swap.contention_s),
+                    "occupancy": float(getattr(swap, "occupancy", 0.0))}
         cands = [{f: ([int(d) for d in getattr(t, f)] if f == "shape"
                       else _plain(getattr(t, f))) for f in _CAND_FIELDS}
                  for t in candidates]
@@ -160,7 +161,8 @@ class PolicyRecord:
                           m.get("budget", self.budget),
                           m.get("stall_time", 0.0), m.get("t_iter", 0.0),
                           m.get("n_ops", self.n_ops),
-                          contention_s=m.get("contention_s", 0.0))
+                          contention_s=m.get("contention_s", 0.0),
+                          occupancy=m.get("occupancy", 0.0))
 
     def profile_stub(self) -> _ProfileStub:
         from repro.core.profiler import TensorInstance

@@ -151,6 +151,26 @@ def test_quant_error_bound(rows, cols, seed):
     assert np.all(err <= amax / 127.0 + 1e-12)
 
 
+@given(st.integers(1, 600), st.integers(2, 64),
+       st.sampled_from([32, 64, 128, 256]), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quant_ragged_rows_match_single_block(rows, cols, br, seed):
+    """R % block_rows != 0 goes through the pad-and-slice path; each row
+    is quantized independently, so the result must be bit-identical to
+    quantizing with one unpadded block covering all rows."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(rows, cols), jnp.float32)
+    q, s = quantize(x, block_rows=br)
+    q1, s1 = quantize(x, block_rows=rows)
+    assert q.shape == x.shape and s.shape[0] == rows
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q1))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s1))
+    xh = dequantize(q, s, jnp.float32, block_rows=br)
+    amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    err = np.abs(np.asarray(xh) - np.asarray(x))
+    assert np.all(err <= amax / 127.0 + 1e-12)
+
+
 def test_compressed_offload_grad_flows():
     x = jnp.asarray(RNG.randn(8, 64), jnp.float32)
     g = jax.grad(lambda x: jnp.sum(compressed_offload(x, "ffn_act") ** 2))(x)
